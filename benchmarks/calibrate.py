@@ -1,0 +1,123 @@
+"""Calibration harness: run all 12 paper workloads x 6 mechanisms and report
+every headline claim of the paper next to the simulated value.
+
+Paper targets (16 threads, §1/§7, Figs. 2/7/9/11/12):
+
+  speedup (norm. CPU-only): FG 1.39  CG 1.00  NC 0.97  LazyPIM 1.66  Ideal 1.84
+  LazyPIM deltas: +19.6% vs FG, +65.9% vs CG, +71.4% vs NC, +66.0% vs CPU,
+                  within 9.8% of Ideal
+  traffic (norm. CPU-only): LazyPIM 0.137 (-86.3% vs CPU, -30.9% vs CG)
+  energy  (norm. CPU-only): LazyPIM 0.563 (-18.0% vs CG, -35.5% vs FG,
+                  -62.2% vs NC, -43.7% vs CPU, within 4.4% of Ideal)
+  conflict rates: Components-Enron partial 23.2% (full: 47.1% ideal/67.8% real)
+                  HTAP-128      partial  9.0% (full: 21.3% ideal/37.8% real)
+
+Usage: PYTHONPATH=src python -m benchmarks.calibrate
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.coherence import LazyPIMConfig, simulate_lazypim
+from repro.sim.costmodel import HWParams
+from repro.sim.engine import run_all, summarize
+from repro.sim.prep import prepare
+from repro.sim.trace import all_workloads, make_trace
+
+MECHS = ("cpu", "fg", "cg", "nc", "lazypim", "ideal")
+
+
+def run_matrix(threads: int = 16, hw: HWParams | None = None, verbose: bool = True):
+    hw = hw or HWParams()
+    rows = {}
+    for app, g in all_workloads():
+        t0 = time.time()
+        tt = prepare(make_trace(app, g, threads=threads))
+        res = run_all(tt, hw)
+        rows[tt.name] = summarize(res, hw)
+        if verbose:
+            d = rows[tt.name]
+            line = " ".join(
+                f"{m}:{d[m]['speedup']:.2f}/{d[m]['traffic']:.2f}/{d[m]['energy']:.2f}"
+                for m in ("fg", "cg", "nc", "lazypim", "ideal"))
+            print(f"{tt.name:22s} {line}  confl={d['lazypim']['conflict_rate']:.2f}"
+                  f"/{d['lazypim']['conflict_rate_exact']:.2f} ({time.time()-t0:.0f}s)")
+    return rows
+
+
+def aggregate(rows):
+    agg = {}
+    for m in MECHS:
+        agg[m] = dict(
+            speedup=float(np.mean([r[m]["speedup"] for r in rows.values()])),
+            traffic=float(np.mean([r[m]["traffic"] for r in rows.values()])),
+            energy=float(np.mean([r[m]["energy"] for r in rows.values()])),
+        )
+    return agg
+
+
+def conflict_study(hw: HWParams | None = None, threads: int = 16):
+    """Fig. 12 reproduction: full vs partial commit conflict rates."""
+    hw = hw or HWParams()
+    out = {}
+    for app, g in (("components", "enron"), ("htap128", None)):
+        tt = prepare(make_trace(app, g, threads=threads))
+        partial = simulate_lazypim(tt, hw, LazyPIMConfig(partial_commits=True))
+        full = simulate_lazypim(tt, hw, LazyPIMConfig(partial_commits=False))
+        out[tt.name] = dict(
+            partial_real=partial.conflict_rate,
+            partial_ideal=partial.conflict_rate_exact,
+            full_real=full.conflict_rate,
+            full_ideal=full.conflict_rate_exact,
+        )
+    return out
+
+
+TARGETS = dict(
+    speedup=dict(fg=1.39, cg=1.00, nc=0.97, lazypim=1.66, ideal=1.84),
+    traffic=dict(lazypim=0.137, cg=0.198),
+    energy=dict(fg=0.873, cg=0.687, nc=1.489, lazypim=0.563, ideal=0.539),
+)
+
+
+def main():
+    hw = HWParams()
+    rows = run_matrix(hw=hw)
+    agg = aggregate(rows)
+    print("\n=== Aggregates (mean over 12 workloads, normalized to CPU-only) ===")
+    print(f"{'mech':8s} {'speedup':>8s} {'target':>7s} {'traffic':>8s} {'target':>7s} {'energy':>8s} {'target':>7s}")
+    for m in ("fg", "cg", "nc", "lazypim", "ideal"):
+        ts = TARGETS["speedup"].get(m, float("nan"))
+        tt_ = TARGETS["traffic"].get(m, float("nan"))
+        te = TARGETS["energy"].get(m, float("nan"))
+        a = agg[m]
+        print(f"{m:8s} {a['speedup']:8.3f} {ts:7.2f} {a['traffic']:8.3f} {tt_:7.3f} {a['energy']:8.3f} {te:7.3f}")
+
+    lz, fg, cg, nc, ideal = (agg[m] for m in ("lazypim", "fg", "cg", "nc", "ideal"))
+    print("\n=== Headline claims ===")
+    print(f"LazyPIM vs FG perf:     {lz['speedup']/fg['speedup']-1:+.1%}   (paper +19.6%)")
+    print(f"LazyPIM vs CG perf:     {lz['speedup']/cg['speedup']-1:+.1%}   (paper +65.9%)")
+    print(f"LazyPIM vs NC perf:     {lz['speedup']/nc['speedup']-1:+.1%}   (paper +71.4%)")
+    print(f"LazyPIM vs CPU perf:    {lz['speedup']-1:+.1%}   (paper +66.0%)")
+    print(f"LazyPIM gap to Ideal:   {1-lz['speedup']/ideal['speedup']:.1%}   (paper 9.8%)")
+    print(f"LazyPIM traffic vs CG:  {lz['traffic']/cg['traffic']-1:+.1%}   (paper -30.9%)")
+    print(f"LazyPIM traffic vs CPU: {lz['traffic']-1:+.1%}   (paper -86.3%)")
+    print(f"LazyPIM energy vs CG:   {lz['energy']/cg['energy']-1:+.1%}   (paper -18.0%)")
+    print(f"LazyPIM energy vs FG:   {lz['energy']/fg['energy']-1:+.1%}   (paper -35.5%)")
+    print(f"LazyPIM energy vs NC:   {lz['energy']/nc['energy']-1:+.1%}   (paper -62.2%)")
+    print(f"LazyPIM energy vs CPU:  {lz['energy']-1:+.1%}   (paper -43.7%)")
+    print(f"LazyPIM energy gap to Ideal: {lz['energy']/ideal['energy']-1:+.1%} (paper 4.4%)")
+
+    print("\n=== Fig.12 conflict rates ===")
+    cs = conflict_study(hw)
+    for k, v in cs.items():
+        print(f"{k}: partial {v['partial_real']:.1%} real / {v['partial_ideal']:.1%} ideal "
+              f"| full {v['full_real']:.1%} real / {v['full_ideal']:.1%} ideal")
+    print("(paper: components-enron 23.2%/— | 67.8%/47.1%; htap128 9.0%/— | 37.8%/21.3%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Fig. 11: normalized energy, 16 threads.  Validates: LazyPIM -18.0% vs
+CG, -35.5% vs FG, -62.2% vs NC, -43.7% vs CPU-only, within ~4.4% of Ideal."""
+
+from repro.sim.costmodel import HWParams
+from repro.sim.engine import run_all, summarize
+from repro.sim.prep import prepare
+from repro.sim.trace import all_workloads, make_trace
+
+
+def run(threads: int = 16):
+    hw = HWParams()
+    rows = {}
+    for app, g in all_workloads():
+        tt = prepare(make_trace(app, g, threads=threads))
+        rows[tt.name] = summarize(run_all(tt, hw), hw)
+    return rows
+
+
+def main():
+    rows = run()
+    mechs = ("fg", "cg", "nc", "lazypim", "ideal")
+    print("workload," + ",".join(mechs))
+    for name, r in rows.items():
+        print(name + "," + ",".join(f"{r[m]['energy']:.3f}" for m in mechs))
+
+
+if __name__ == "__main__":
+    main()

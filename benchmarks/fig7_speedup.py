@@ -1,0 +1,32 @@
+"""Fig. 2 + Fig. 7: speedup of every mechanism over CPU-only, all 12
+workloads, 16 threads.  Validates: Ideal ~ +84% (graphs), FG ~ +38.7%,
+CG ~ -1.4%, NC ~ -3.2%, LazyPIM +19.6% over FG / +66% over CPU."""
+
+from repro.sim.costmodel import HWParams
+from repro.sim.engine import run_all, summarize
+from repro.sim.prep import prepare
+from repro.sim.trace import all_workloads, make_trace
+
+
+def run(threads: int = 16):
+    hw = HWParams()
+    rows = {}
+    for app, g in all_workloads():
+        tt = prepare(make_trace(app, g, threads=threads))
+        rows[tt.name] = summarize(run_all(tt, hw), hw)
+    return rows
+
+
+def main():
+    rows = run()
+    mechs = ("fg", "cg", "nc", "lazypim", "ideal")
+    print("workload," + ",".join(mechs))
+    for name, r in rows.items():
+        print(name + "," + ",".join(f"{r[m]['speedup']:.3f}" for m in mechs))
+    import numpy as np
+    for m in mechs:
+        print(f"mean_{m}," + f"{np.mean([r[m]['speedup'] for r in rows.values()]):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Fig. 8: PageRank-arXiv speedup vs thread count (4/8/16), normalized to
+CPU-only at each count.  Validates the scaling ORDER: Ideal > LazyPIM > FG
+> {CG, NC}, with FG scaling better than CG/NC."""
+
+from repro.sim.costmodel import HWParams
+from repro.sim.engine import run_all, summarize
+from repro.sim.prep import prepare
+from repro.sim.trace import make_trace
+
+
+def run():
+    out = {}
+    for threads in (4, 8, 16):
+        hw = HWParams(cpu_cores=threads, pim_cores=threads)
+        tt = prepare(make_trace("pagerank", "arxiv", threads=threads))
+        out[threads] = summarize(run_all(tt, hw), hw)
+    return out
+
+
+def main():
+    rows = run()
+    mechs = ("fg", "cg", "nc", "lazypim", "ideal")
+    print("threads," + ",".join(mechs))
+    for t, r in rows.items():
+        print(f"{t}," + ",".join(f"{r[m]['speedup']:.3f}" for m in mechs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Fig. 9: normalized off-chip traffic (lower is better), 16 threads.
+Validates: LazyPIM -30.9% vs CG (best prior) and -86% vs CPU-only; NC
+highest; the Radii-arXiv flush-count reduction (-92.2% vs CG)."""
+
+from repro.sim.costmodel import HWParams
+from repro.sim.engine import run_all, summarize
+from repro.sim.prep import prepare
+from repro.sim.trace import all_workloads, make_trace
+
+
+def run(threads: int = 16):
+    hw = HWParams()
+    rows, flush = {}, {}
+    for app, g in all_workloads():
+        tt = prepare(make_trace(app, g, threads=threads))
+        res = run_all(tt, hw)
+        rows[tt.name] = summarize(res, hw)
+        flush[tt.name] = {m: res[m].flush_lines for m in ("cg", "lazypim")}
+    return rows, flush
+
+
+def main():
+    rows, flush = run()
+    mechs = ("fg", "cg", "nc", "lazypim", "ideal")
+    print("workload," + ",".join(mechs))
+    for name, r in rows.items():
+        print(name + "," + ",".join(f"{r[m]['traffic']:.3f}" for m in mechs))
+    fr = flush["radii-arxiv"]
+    print(f"radii_arxiv_flush_reduction,{1 - fr['lazypim']/max(fr['cg'],1):.3f}"
+          f",paper=0.922")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,...]
+
+Prints each figure's CSV block plus the headline-claims summary from the
+calibration harness (benchmarks.calibrate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+MODULES = (
+    "fig7_speedup",          # also covers fig2 (same metric, full set)
+    "fig8_scaling",
+    "fig9_traffic",
+    "fig10_traffic_scaling",
+    "fig11_energy",
+    "fig12_partial_commits",
+    "fig13_signature_size",
+    "kernel_bloom",
+    "lazy_sync_collectives",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        importlib.import_module(f"benchmarks.{name}").main()
+        print(f"[{name}: {time.time()-t0:.0f}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Batched serving example: continuous batching over a request queue
+(deliverable b).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import serve  # noqa: E402
+
+
+def main():
+    args = argparse.Namespace(arch="qwen3-4b", smoke=True, requests=6,
+                              batch=3, max_new=8, max_len=48, seed=0)
+    served = serve(args)
+    for r in served:
+        print(f"req {r.rid}: prompt {len(r.prompt)} toks -> "
+              f"{len(r.out) - len(r.prompt)} new toks")
+    assert len(served) == args.requests
+
+
+if __name__ == "__main__":
+    main()

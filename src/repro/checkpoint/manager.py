@@ -1,0 +1,119 @@
+"""Step-atomic, async-capable checkpointing with elastic restore.
+
+Layout (one directory per step, atomic via rename):
+
+    <root>/step_000123.tmp/...   (written)
+    <root>/step_000123/          (renamed on completion = commit point)
+        manifest.json            (step, tree structure, shard policy)
+        arr_<idx>.npy            (one file per leaf)
+
+Restore re-shards onto whatever mesh the restarted job has (elastic
+re-mesh: a 512-chip checkpoint restores onto 448 chips by re-slicing host
+shards) — on this single-process container that reduces to device_put with
+the new shardings, which is exactly the code path a real cluster runs per
+host.  Async: the save runs on a worker thread over host-fetched arrays so
+the train loop continues; ``wait()`` joins before the next save.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ---- save -------------------------------------------------------------
+
+    def save(self, step: int, tree, blocking: bool = False) -> None:
+        """Snapshot `tree` at `step`. Device->host copy happens synchronously
+        (consistent snapshot); file I/O is async unless blocking."""
+        self.wait()
+
+        def to_numpy(x):
+            a = np.asarray(x)
+            # bf16 (ml_dtypes) doesn't survive np.save/load: widen to fp32
+            # (lossless); restore() casts back to the target leaf dtype.
+            if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
+                a = a.astype(np.float32)
+            return a
+
+        host_tree = jax.tree.map(to_numpy, tree)
+
+        def _write():
+            tmp = os.path.join(self.root, f"step_{step:09d}.tmp")
+            final = os.path.join(self.root, f"step_{step:09d}")
+            os.makedirs(tmp, exist_ok=True)
+            leaves, treedef = jax.tree.flatten(host_tree)
+            for i, leaf in enumerate(leaves):
+                np.save(os.path.join(tmp, f"arr_{i}.npy"), leaf)
+            with open(os.path.join(tmp, MANIFEST), "w") as f:
+                json.dump({"step": step, "num_leaves": len(leaves),
+                           "treedef": str(treedef)}, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # commit point
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # ---- restore ------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.root, name, MANIFEST)):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like_tree, shardings=None):
+        """Load step's arrays into the structure of `like_tree`, placing each
+        leaf with `shardings` (elastic re-mesh = new shardings here)."""
+        path = os.path.join(self.root, f"step_{step:09d}")
+        with open(os.path.join(path, MANIFEST)) as f:
+            manifest = json.load(f)
+        leaves, treedef = jax.tree.flatten(like_tree)
+        assert manifest["num_leaves"] == len(leaves), "tree structure changed"
+        loaded = [np.load(os.path.join(path, f"arr_{i}.npy"))
+                  for i in range(len(leaves))]
+        # Cast to the target leaves' dtypes (bf16 round-trips through
+        # ml_dtypes numpy arrays that jit won't ingest directly).
+        import jax.numpy as jnp
+        loaded = [jnp.asarray(a, dtype=like.dtype)
+                  for a, like in zip(loaded, leaves)]
+        tree = jax.tree.unflatten(treedef, loaded)
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        return tree

@@ -1,0 +1,81 @@
+"""Assigned-architecture registry: ``get_config(name)`` / ``--arch <id>``.
+
+Each ``<id>.py`` exports ``config()`` (the exact published geometry) and
+``smoke()`` (a reduced same-family config for CPU smoke tests).  The four
+input shapes are defined here; per-arch applicability follows the brief:
+``long_500k`` runs only on sub-quadratic backbones, and every arch here has
+a decoder, so decode shapes apply everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.common import ModelConfig
+
+ARCHS = (
+    "recurrentgemma_2b",
+    "phi3_mini_3_8b",
+    "deepseek_67b",
+    "nemotron_4_340b",
+    "qwen3_4b",
+    "seamless_m4t_large_v2",
+    "qwen2_moe_a2_7b",
+    "moonshot_v1_16b_a3b",
+    "internvl2_26b",
+    "falcon_mamba_7b",
+)
+
+# Canonical ids (hyphenated, as in the assignment) -> module names.
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _module(name: str):
+    key = name.replace("-", "_").replace(".", "_")
+    key = ALIASES.get(name, key)
+    if key not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ALIASES)}")
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).config()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).smoke()
+
+
+def shapes_for(cfg: ModelConfig) -> list[str]:
+    """Applicable shape cells for an arch (DESIGN.md §Arch-applicability)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.subquadratic:
+        out.append("long_500k")  # needs sub-quadratic attention
+    return out
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every (arch, shape) dry-run cell."""
+    cells = []
+    for a in ARCHS:
+        cfg = get_config(a)
+        for s in shapes_for(cfg):
+            cells.append((a, s))
+    return cells

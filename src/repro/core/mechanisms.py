@@ -1,0 +1,410 @@
+"""Baseline PIM coherence mechanisms (paper §3.2, §7).
+
+Five mechanisms share one window-granular execution model (see
+``repro.sim.prep``):
+
+* ``cpu_only``  — the whole application runs on the processor; kernel-phase
+  accesses stream through the cache hierarchy with poor locality.
+* ``ideal``     — PIM execution with *zero* coherence penalty (upper bound).
+* ``fg``        — fine-grained MESI: every PIM L1 miss sends a request to the
+  processor directory over the off-chip link; dirty lines ping-pong.
+* ``cg``        — coarse-grained locks: every kernel launch flushes *all*
+  dirty PIM-region lines and blocks processor accesses to the region for the
+  kernel's duration.
+* ``nc``        — PIM data non-cacheable in the processor: every CPU access
+  to the region is an off-chip DRAM access.
+
+Each returns a :class:`SimResult` with time / traffic / energy and the
+coherence-event counters the benchmarks report.  LazyPIM itself lives in
+``repro.core.coherence``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.costmodel import CTRL_BYTES, HWParams, LINE_BYTES
+from repro.sim.prep import (
+    TraceTensors,
+    cpu_cache_step,
+    gather_hits,
+    scatter_set,
+)
+
+__all__ = [
+    "SimResult",
+    "simulate_cpu_only",
+    "simulate_ideal",
+    "simulate_fg",
+    "simulate_cg",
+    "simulate_nc",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Aggregated metrics for one (trace, mechanism) simulation."""
+
+    name: str
+    mechanism: str
+    time_ns: float
+    offchip_bytes: float
+    dram_bytes: float
+    l1_accesses: float
+    l2_accesses: float
+    # coherence events
+    commits: float = 0.0
+    conflicts_sig: float = 0.0     # detected by signatures (incl. false pos.)
+    conflicts_exact: float = 0.0   # ground-truth RAW conflicts
+    rollbacks: float = 0.0
+    flush_lines: float = 0.0
+    blocked_accesses: float = 0.0
+    dbi_writebacks: float = 0.0
+    sig_bytes: float = 0.0
+
+    def energy_pj(self, hw: HWParams) -> dict[str, float]:
+        cache = (self.l1_accesses * hw.l1_pj_per_access
+                 + self.l2_accesses * hw.l2_pj_per_access
+                 + self.dbi_writebacks * hw.dbi_pj_per_access)
+        dram = self.dram_bytes * 8.0 * hw.dram_pj_per_bit
+        off = self.offchip_bytes * 8.0 * (hw.serdes_pj_per_bit
+                                          + hw.link_pj_per_bit)
+        return {"cache": cache, "dram": dram, "offchip": off,
+                "total": cache + dram + off}
+
+    @property
+    def conflict_rate(self) -> float:
+        return self.conflicts_sig / max(self.commits, 1.0)
+
+    @property
+    def conflict_rate_exact(self) -> float:
+        return self.conflicts_exact / max(self.commits, 1.0)
+
+
+def _zeros(n: int):
+    return jnp.zeros((n,), dtype=bool)
+
+
+def _f(x):
+    return jnp.asarray(x, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Shared per-window terms
+# ---------------------------------------------------------------------------
+
+
+def _pim_compute_ns(tt: TraceTensors, hw: HWParams, w):
+    return tt.pim_instr[w] / (hw.pim_cores * hw.pim_ipc * hw.freq_ghz)
+
+
+def _pim_mem_ns(tt: TraceTensors, hw: HWParams, w, extra_per_miss: float = 0.0):
+    return tt.pim_uniq[w] * (hw.pim_mem_ns + extra_per_miss) / hw.pim_cores
+
+
+def _cpu_compute_ns(tt: TraceTensors, hw: HWParams, w):
+    return tt.cpu_instr[w] / (hw.cpu_cores * hw.cpu_ipc * hw.freq_ghz)
+
+
+def _priv_mem_ns(tt: TraceTensors, hw: HWParams, w):
+    mr = tt.cpu_priv_miss_rate
+    per = mr * hw.offchip_mem_ns + (1.0 - mr) * hw.l1_hit_ns
+    return tt.cpu_priv[w] * per / hw.cpu_cores
+
+
+def _priv_fill_bytes(tt: TraceTensors, w):
+    return tt.cpu_priv[w] * tt.cpu_priv_miss_rate * LINE_BYTES
+
+
+def _pim_dram_bytes(tt: TraceTensors, w):
+    """Internal (TSV) DRAM traffic of the PIM kernel itself."""
+    return (tt.pim_uniq[w] + tt.pim_uniq_w[w]) * LINE_BYTES
+
+
+def _cpu_acc_count(tt: TraceTensors, w):
+    return (jnp.sum(tt.cpu_r_valid[w]) + jnp.sum(tt.cpu_w_valid[w])).astype(jnp.float32)
+
+
+def _cpu_dyn_count(tt: TraceTensors, w):
+    return _cpu_acc_count(tt, w) * tt.cpu_reuse
+
+
+def _pim_acc_count(tt: TraceTensors, w):
+    return (jnp.sum(tt.pim_r_valid[w]) + jnp.sum(tt.pim_w_valid[w])).astype(jnp.float32)
+
+
+def _bw_bound_ns(hw: HWParams, offchip_bytes):
+    return offchip_bytes / hw.offchip_bw_gbs
+
+
+def _finalize(tt: TraceTensors, mech: str, acc: dict) -> SimResult:
+    return SimResult(
+        name=tt.name,
+        mechanism=mech,
+        **{k: float(v) for k, v in acc.items()},
+    )
+
+
+# ---------------------------------------------------------------------------
+# CPU-only
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _run_cpu_only(tt: TraceTensors, hw: HWParams):
+    def step(carry, w):
+        present, dirty, t, off, dram, l1, l2 = carry
+        k = tt.kernel_id[w]
+        pre = tt.pre_writes[k]
+        start = tt.kernel_start[w]
+        present = jnp.where(start, present | pre, present)
+        dirty = jnp.where(start, dirty | pre, dirty)
+
+        out = cpu_cache_step(tt, hw, present, dirty, w,
+                             cap_lines=hw.cpu_only_cache_cap)
+        # Kernel phase executes on the processor: issue-limited at CPU width,
+        # memory-bound accesses stream (no reuse beyond the window; the OoO
+        # core overlaps the misses, but they all cross the off-chip pins).
+        kern_compute = tt.pim_instr[w] / (hw.cpu_cores * hw.cpu_ipc * hw.freq_ghz)
+        kern_mem = tt.pim_uniq[w] * (hw.offchip_mem_ns / hw.cpu_kernel_mlp) / hw.cpu_cores
+        kern_fill = (tt.pim_uniq[w] + tt.pim_uniq_w[w]) * LINE_BYTES
+
+        off_w = out.fill_bytes + kern_fill + _priv_fill_bytes(tt, w)
+        lat = (_cpu_compute_ns(tt, hw, w) + kern_compute + kern_mem
+               + out.mem_ns + _priv_mem_ns(tt, hw, w))
+        t_w = jnp.maximum(lat, _bw_bound_ns(hw, off_w))
+
+        l1_w = _cpu_dyn_count(tt, w) + _pim_acc_count(tt, w) + tt.cpu_priv[w]
+        l2_w = out.misses + out.hits + tt.pim_uniq[w]
+        return (out.present, out.dirty, t + t_w, off + off_w, dram + off_w,
+                l1 + l1_w, l2 + l2_w), None
+
+    init = (_zeros(tt.num_lines), _zeros(tt.num_lines),
+            _f(0), _f(0), _f(0), _f(0), _f(0))
+    (present, dirty, t, off, dram, l1, l2), _ = jax.lax.scan(
+        step, init, jnp.arange(tt.num_windows))
+    return dict(time_ns=t, offchip_bytes=off, dram_bytes=dram,
+                l1_accesses=l1, l2_accesses=l2)
+
+
+def simulate_cpu_only(tt: TraceTensors, hw: HWParams) -> SimResult:
+    return _finalize(tt, "cpu", _run_cpu_only(tt, hw))
+
+
+# ---------------------------------------------------------------------------
+# Ideal-PIM
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _run_ideal(tt: TraceTensors, hw: HWParams):
+    def step(carry, w):
+        present, dirty, t, off, dram, l1, l2 = carry
+        k = tt.kernel_id[w]
+        start = tt.kernel_start[w]
+        pre = tt.pre_writes[k]
+        present = jnp.where(start, present | pre, present)
+        dirty = jnp.where(start, dirty | pre, dirty)
+
+        out = cpu_cache_step(tt, hw, present, dirty, w)
+        # PIM writes update DRAM; CPU copies of those lines are refreshed for
+        # free (ideal), modeled as invalidation without any message cost.
+        pim_w = scatter_set(_zeros(tt.num_lines), tt.pim_writes[w], tt.pim_w_valid[w])
+        present = out.present & ~pim_w
+        dirty = out.dirty & ~pim_w
+
+        pim_ns = _pim_compute_ns(tt, hw, w) + _pim_mem_ns(tt, hw, w)
+        cpu_ns = _cpu_compute_ns(tt, hw, w) + out.mem_ns + _priv_mem_ns(tt, hw, w)
+        off_w = out.fill_bytes + _priv_fill_bytes(tt, w)
+        t_w = jnp.maximum(jnp.maximum(pim_ns, cpu_ns), _bw_bound_ns(hw, off_w))
+        dram_w = off_w + _pim_dram_bytes(tt, w)
+
+        l1_w = _cpu_dyn_count(tt, w) + _pim_acc_count(tt, w) + tt.cpu_priv[w]
+        l2_w = out.misses + out.hits
+        return (present, dirty, t + t_w, off + off_w, dram + dram_w,
+                l1 + l1_w, l2 + l2_w), None
+
+    init = (_zeros(tt.num_lines), _zeros(tt.num_lines),
+            _f(0), _f(0), _f(0), _f(0), _f(0))
+    (present, dirty, t, off, dram, l1, l2), _ = jax.lax.scan(
+        step, init, jnp.arange(tt.num_windows))
+    return dict(time_ns=t, offchip_bytes=off, dram_bytes=dram,
+                l1_accesses=l1, l2_accesses=l2)
+
+
+def simulate_ideal(tt: TraceTensors, hw: HWParams) -> SimResult:
+    return _finalize(tt, "ideal", _run_ideal(tt, hw))
+
+
+# ---------------------------------------------------------------------------
+# Fine-grained MESI (FG)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _run_fg(tt: TraceTensors, hw: HWParams):
+    def step(carry, w):
+        present, dirty, t, off, dram, l1, l2 = carry
+        k = tt.kernel_id[w]
+        start = tt.kernel_start[w]
+        pre = tt.pre_writes[k]
+        present = jnp.where(start, present | pre, present)
+        dirty = jnp.where(start, dirty | pre, dirty)
+
+        out = cpu_cache_step(tt, hw, present, dirty, w)
+        present, dirty = out.present, out.dirty
+
+        # Every PIM miss consults the processor directory over the off-chip
+        # link (request + response, partially pipelined with the vault
+        # access), stalling the in-order PIM pipeline.  Full MESI needs
+        # request + response + invalidations + acks per transaction.
+        rt_ns = hw.fg_msg_exposed_ns
+        msg_bytes = tt.pim_uniq[w] * 8.0 * CTRL_BYTES
+
+        # PIM reads/writes of CPU-dirty lines transfer the line off-chip.
+        pr_dirty = gather_hits(dirty, tt.pim_reads[w], tt.pim_r_valid[w])
+        pw_dirty = gather_hits(dirty, tt.pim_writes[w], tt.pim_w_valid[w])
+        xfer_lines = (jnp.sum(pr_dirty) + jnp.sum(pw_dirty)).astype(jnp.float32)
+        # Ownership moves to PIM: lines leave the CPU dirty set.
+        dirty = dirty & ~scatter_set(_zeros(tt.num_lines), tt.pim_reads[w],
+                                     tt.pim_r_valid[w] & pr_dirty)
+        dirty = dirty & ~scatter_set(_zeros(tt.num_lines), tt.pim_writes[w],
+                                     tt.pim_w_valid[w] & pw_dirty)
+        # PIM exclusive writes invalidate CPU copies (next CPU access misses).
+        pim_w = scatter_set(_zeros(tt.num_lines), tt.pim_writes[w], tt.pim_w_valid[w])
+        present = present & ~pim_w
+
+        pim_ns = (_pim_compute_ns(tt, hw, w)
+                  + _pim_mem_ns(tt, hw, w, extra_per_miss=rt_ns)
+                  + xfer_lines * LINE_BYTES / hw.offchip_bw_gbs)
+        cpu_ns = _cpu_compute_ns(tt, hw, w) + out.mem_ns + _priv_mem_ns(tt, hw, w)
+        off_w = (out.fill_bytes + _priv_fill_bytes(tt, w) + msg_bytes
+                 + xfer_lines * LINE_BYTES)
+        t_w = jnp.maximum(jnp.maximum(pim_ns, cpu_ns), _bw_bound_ns(hw, off_w))
+        dram_w = out.fill_bytes + _priv_fill_bytes(tt, w) + _pim_dram_bytes(tt, w)
+
+        l1_w = _cpu_dyn_count(tt, w) + _pim_acc_count(tt, w) + tt.cpu_priv[w]
+        l2_w = out.misses + out.hits + tt.pim_uniq[w]  # directory lookups
+        return (present, dirty, t + t_w, off + off_w, dram + dram_w,
+                l1 + l1_w, l2 + l2_w), None
+
+    init = (_zeros(tt.num_lines), _zeros(tt.num_lines),
+            _f(0), _f(0), _f(0), _f(0), _f(0))
+    (present, dirty, t, off, dram, l1, l2), _ = jax.lax.scan(
+        step, init, jnp.arange(tt.num_windows))
+    return dict(time_ns=t, offchip_bytes=off, dram_bytes=dram,
+                l1_accesses=l1, l2_accesses=l2)
+
+
+def simulate_fg(tt: TraceTensors, hw: HWParams) -> SimResult:
+    return _finalize(tt, "fg", _run_fg(tt, hw))
+
+
+# ---------------------------------------------------------------------------
+# Coarse-grained locks (CG)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _run_cg(tt: TraceTensors, hw: HWParams):
+    def step(carry, w):
+        present, dirty, t, off, dram, l1, l2, flushed, blocked = carry
+        k = tt.kernel_id[w]
+        start = tt.kernel_start[w]
+        pre = tt.pre_writes[k]
+        present = jnp.where(start, present | pre, present)
+        dirty = jnp.where(start, dirty | pre, dirty)
+
+        # Kernel launch: flush EVERY dirty line in the region, invalidate all.
+        n_flush = jnp.where(start, jnp.sum(dirty), 0).astype(jnp.float32)
+        flush_bytes = n_flush * LINE_BYTES
+        flush_ns = flush_bytes / hw.offchip_bw_gbs + jnp.where(start, hw.offchip_msg_ns, 0.0)
+        dirty = jnp.where(start, jnp.zeros_like(dirty), dirty)
+        present = jnp.where(start, jnp.zeros_like(present), present)
+
+        # Region locked: every thread touches PIM data every window (the
+        # recorded lines stand for cpu_reuse dynamic accesses spread over all
+        # threads), so each in-order-committing thread stalls at its first
+        # blocked access until the kernel ends.  Thread-side work therefore
+        # SERIALIZES behind the kernel instead of overlapping it — this is
+        # the CG pathology of §3.2 ("87.9% of accesses blocked", threads
+        # "blocked up to 73.1% of total execution time").  The blocked
+        # accesses then replay as misses (the region was invalidated).
+        n_acc = _cpu_acc_count(tt, w)
+        n_dyn = n_acc * tt.cpu_reuse
+        replay_ns = (n_acc * hw.offchip_mem_ns / hw.cpu_mlp
+                     + n_acc * (tt.cpu_reuse - 1.0) * hw.l2_hit_ns) / hw.cpu_cores
+        deferred_fill = n_acc * LINE_BYTES
+
+        # The replayed accesses repopulate the cache and re-dirty the
+        # written lines — which the NEXT kernel launch flushes again
+        # (the CG flush/refetch ping-pong of §3.2).
+        present = scatter_set(present, tt.cpu_reads[w], tt.cpu_r_valid[w])
+        present = scatter_set(present, tt.cpu_writes[w], tt.cpu_w_valid[w])
+        dirty = scatter_set(dirty, tt.cpu_writes[w], tt.cpu_w_valid[w])
+
+        # A quarter of the thread compute is region-independent (private
+        # data) and overlaps the kernel; the rest stalls at its first
+        # blocked access and serializes behind it with the replays.
+        pim_ns = _pim_compute_ns(tt, hw, w) + _pim_mem_ns(tt, hw, w)
+        serial_ns = replay_ns + 0.75 * _cpu_compute_ns(tt, hw, w)
+        overlap_ns = 0.25 * _cpu_compute_ns(tt, hw, w) + _priv_mem_ns(tt, hw, w)
+        off_w = flush_bytes + deferred_fill + _priv_fill_bytes(tt, w)
+        t_w = (jnp.maximum(jnp.maximum(pim_ns, overlap_ns) + serial_ns,
+                           _bw_bound_ns(hw, off_w))
+               + flush_ns)
+        dram_w = off_w + _pim_dram_bytes(tt, w)
+
+        l1_w = n_dyn + _pim_acc_count(tt, w) + tt.cpu_priv[w]
+        l2_w = n_dyn + n_flush  # flush scans + replayed misses
+        return (present, dirty, t + t_w, off + off_w, dram + dram_w,
+                l1 + l1_w, l2 + l2_w, flushed + n_flush, blocked + n_dyn), None
+
+    init = (_zeros(tt.num_lines), _zeros(tt.num_lines),
+            _f(0), _f(0), _f(0), _f(0), _f(0), _f(0), _f(0))
+    (present, dirty, t, off, dram, l1, l2, flushed, blocked), _ = jax.lax.scan(
+        step, init, jnp.arange(tt.num_windows))
+    return dict(time_ns=t, offchip_bytes=off, dram_bytes=dram,
+                l1_accesses=l1, l2_accesses=l2,
+                flush_lines=flushed, blocked_accesses=blocked)
+
+
+def simulate_cg(tt: TraceTensors, hw: HWParams) -> SimResult:
+    return _finalize(tt, "cg", _run_cg(tt, hw))
+
+
+# ---------------------------------------------------------------------------
+# Non-cacheable PIM data (NC)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _run_nc(tt: TraceTensors, hw: HWParams):
+    def step(carry, w):
+        t, off, dram, l1, l2 = carry
+        out = cpu_cache_step(tt, hw, _zeros(tt.num_lines), _zeros(tt.num_lines),
+                             w, cacheable=False)
+        pim_ns = _pim_compute_ns(tt, hw, w) + _pim_mem_ns(tt, hw, w)
+        cpu_ns = _cpu_compute_ns(tt, hw, w) + out.mem_ns + _priv_mem_ns(tt, hw, w)
+        off_w = out.fill_bytes + _priv_fill_bytes(tt, w)
+        t_w = jnp.maximum(jnp.maximum(pim_ns, cpu_ns), _bw_bound_ns(hw, off_w))
+        # every NC access is a DRAM access, and each one re-activates a row
+        # (no row-buffer locality): charge the activation overhead factor.
+        dram_w = (out.fill_bytes * hw.nc_dram_energy_factor
+                  + _priv_fill_bytes(tt, w) + _pim_dram_bytes(tt, w))
+        l1_w = _pim_acc_count(tt, w) + tt.cpu_priv[w]  # CPU accesses bypass L1
+        l2_w = _f(0)
+        return (t + t_w, off + off_w, dram + dram_w, l1 + l1_w, l2 + l2_w), None
+
+    init = (_f(0), _f(0), _f(0), _f(0), _f(0))
+    (t, off, dram, l1, l2), _ = jax.lax.scan(step, init, jnp.arange(tt.num_windows))
+    return dict(time_ns=t, offchip_bytes=off, dram_bytes=dram,
+                l1_accesses=l1, l2_accesses=l2)
+
+
+def simulate_nc(tt: TraceTensors, hw: HWParams) -> SimResult:
+    return _finalize(tt, "nc", _run_nc(tt, hw))

@@ -1,0 +1,234 @@
+"""Parallel Bloom-filter coherence signatures (LazyPIM §5.3).
+
+LazyPIM compresses the set of cache-line addresses touched by a PIM kernel
+into fixed-width *parallel Bloom filters*: an N-bit signature is partitioned
+into M segments, and each segment uses an independent H3 hash function that
+maps an address to exactly one bit within the segment.  The paper uses
+N = 2048 bits and M = 4 (``PIMReadSet``/``PIMWriteSet``), and a 16-register
+bank of the same geometry for the ``CPUWriteSet``.
+
+This module is the *bit-exact* software model of those hardware registers:
+real H3 hashing, real collisions, real false positives.  Everything is pure
+JAX so the coherence simulator can ``vmap``/``scan`` over it; the Pallas TPU
+kernels in ``repro.kernels.bloom`` implement the same math for the hot batched
+paths and are validated against this module.
+
+Key signature properties used by the protocol (and tested in
+``tests/test_signatures.py``):
+
+* **No false negatives** — once inserted, an address always queries True, and
+  two signatures sharing an address always intersect in every segment.
+* **Sound AND-prefilter** — if any segment of ``a & b`` is empty, the two
+  address sets are provably disjoint (paper §5.3).
+* **Bounded false positives** — membership FP rate follows the partitioned
+  Bloom-filter formula ``(1 - (1 - 1/seg_bits)**n)**M``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SignatureSpec",
+    "empty_signature",
+    "empty_bank",
+    "hash_positions",
+    "insert",
+    "insert_bank_round_robin",
+    "query",
+    "intersect",
+    "intersect_nonempty",
+    "bank_intersect_nonempty",
+    "popcount",
+    "saturation",
+    "expected_membership_fp_rate",
+    "pack_bits",
+    "unpack_bits",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SignatureSpec:
+    """Geometry + hash family of one coherence signature register.
+
+    Defaults follow the paper: 2 Kbit register, M = 4 segments, H3 hashing
+    (Sanchez et al. [39] via Bloom [6]).  ``addr_bits`` covers 32-bit
+    cache-line addresses (the simulator uses line addresses, i.e. byte
+    address >> 6, so 32 bits span a 256 GB physical space).
+    """
+
+    sig_bits: int = 2048
+    num_segments: int = 4
+    addr_bits: int = 32
+    seed: int = 0xC0FFEE
+
+    def __post_init__(self):
+        if self.sig_bits % (32 * self.num_segments) != 0:
+            raise ValueError(
+                f"sig_bits={self.sig_bits} must be a multiple of "
+                f"32*num_segments={32 * self.num_segments}"
+            )
+
+    @property
+    def seg_bits(self) -> int:
+        return self.sig_bits // self.num_segments
+
+    @property
+    def num_words(self) -> int:
+        return self.sig_bits // 32
+
+    @property
+    def words_per_seg(self) -> int:
+        return self.seg_bits // 32
+
+    @functools.cached_property
+    def h3_matrix(self) -> np.ndarray:
+        """H3 hash family: (num_segments, addr_bits) random values in
+        [0, seg_bits).  h_m(a) = XOR_{j : bit j of a set} Q[m, j]."""
+        rng = np.random.default_rng(self.seed)
+        return rng.integers(
+            0, self.seg_bits, size=(self.num_segments, self.addr_bits)
+        ).astype(np.uint32)
+
+
+def empty_signature(spec: SignatureSpec) -> jax.Array:
+    """All-zero signature register, packed as (num_words,) uint32."""
+    return jnp.zeros((spec.num_words,), dtype=jnp.uint32)
+
+
+def empty_bank(spec: SignatureSpec, num_registers: int) -> jax.Array:
+    """Bank of registers (the CPUWriteSet uses 16)."""
+    return jnp.zeros((num_registers, spec.num_words), dtype=jnp.uint32)
+
+
+def hash_positions(spec: SignatureSpec, addrs: jax.Array) -> jax.Array:
+    """Global bit positions for each address: (N, num_segments) in
+    [0, sig_bits).  Position = segment_offset + H3_m(address)."""
+    addrs = addrs.astype(jnp.uint32).reshape(-1)
+    q = jnp.asarray(spec.h3_matrix, dtype=jnp.uint32)  # (M, addr_bits)
+    h = jnp.zeros((addrs.shape[0], spec.num_segments), dtype=jnp.uint32)
+    for j in range(spec.addr_bits):
+        bit = ((addrs >> np.uint32(j)) & np.uint32(1)).astype(bool)
+        h = h ^ jnp.where(bit[:, None], q[None, :, j], np.uint32(0))
+    seg_offsets = (
+        jnp.arange(spec.num_segments, dtype=jnp.uint32) * np.uint32(spec.seg_bits)
+    )
+    return h + seg_offsets[None, :]
+
+
+def pack_bits(spec: SignatureSpec, bits: jax.Array) -> jax.Array:
+    """(sig_bits,) bool -> (num_words,) uint32 (little-endian bit order)."""
+    b = bits.reshape(spec.num_words, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(b << shifts[None, :], axis=1, dtype=jnp.uint32)
+
+
+def unpack_bits(spec: SignatureSpec, words: jax.Array) -> jax.Array:
+    """(..., num_words) uint32 -> (..., sig_bits) bool."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & np.uint32(1)
+    return bits.reshape(*words.shape[:-1], spec.sig_bits).astype(bool)
+
+
+def insert(
+    spec: SignatureSpec,
+    sig: jax.Array,
+    addrs: jax.Array,
+    mask: jax.Array | None = None,
+) -> jax.Array:
+    """Insert a batch of addresses into a signature.
+
+    ``mask`` (bool, same leading shape as ``addrs``) disables individual
+    inserts — used by the simulator's fixed-width trace windows.
+    """
+    pos = hash_positions(spec, addrs).astype(jnp.int32)  # (N, M)
+    if mask is not None:
+        pos = jnp.where(mask.reshape(-1, 1), pos, spec.sig_bits)
+    # Scatter into a bool staging array; duplicate indices are fine for set().
+    staged = jnp.zeros((spec.sig_bits + 1,), dtype=bool)
+    staged = staged.at[pos.reshape(-1)].set(True, mode="drop")
+    return sig | pack_bits(spec, staged[: spec.sig_bits])
+
+
+def insert_bank_round_robin(
+    spec: SignatureSpec,
+    bank: jax.Array,
+    addrs: jax.Array,
+    counter: jax.Array | int,
+    mask: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """CPUWriteSet-style insertion: each address is round-robined into one of
+    the bank's registers (paper §5.3).  Returns (new_bank, new_counter)."""
+    num_regs = bank.shape[0]
+    addrs = addrs.reshape(-1)
+    n = addrs.shape[0]
+    counter = jnp.asarray(counter, dtype=jnp.int32)
+    if mask is None:
+        mask = jnp.ones((n,), dtype=bool)
+    mask = mask.reshape(-1)
+    # Only valid inserts advance the round-robin pointer, like hardware would.
+    offsets = jnp.cumsum(mask.astype(jnp.int32)) - mask.astype(jnp.int32)
+    reg_ids = (counter + offsets) % num_regs
+    pos = hash_positions(spec, addrs).astype(jnp.int32)  # (n, M)
+    pos = jnp.where(mask[:, None], pos, spec.sig_bits)
+    staged = jnp.zeros((num_regs, spec.sig_bits + 1), dtype=bool)
+    reg_rep = jnp.repeat(reg_ids, spec.num_segments)
+    staged = staged.at[reg_rep, pos.reshape(-1)].set(True, mode="drop")
+    new_bank = bank | jax.vmap(lambda b: pack_bits(spec, b))(
+        staged[:, : spec.sig_bits]
+    )
+    return new_bank, counter + jnp.sum(mask.astype(jnp.int32))
+
+
+def query(spec: SignatureSpec, sig: jax.Array, addrs: jax.Array) -> jax.Array:
+    """Membership test for a batch of addresses -> (N,) bool.
+
+    No false negatives; false-positive rate per
+    :func:`expected_membership_fp_rate`.
+    """
+    pos = hash_positions(spec, addrs).astype(jnp.int32)  # (N, M)
+    bits = unpack_bits(spec, sig)  # (sig_bits,)
+    return jnp.all(bits[pos], axis=-1)
+
+
+def intersect(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a & b
+
+
+def intersect_nonempty(spec: SignatureSpec, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Paper §5.3 conflict prefilter: True iff *every* segment of (a & b) has
+    at least one bit set.  False => the address sets are provably disjoint."""
+    inter = (a & b).reshape(spec.num_segments, spec.words_per_seg)
+    return jnp.all(jnp.any(inter != 0, axis=1))
+
+
+def bank_intersect_nonempty(
+    spec: SignatureSpec, bank: jax.Array, sig: jax.Array
+) -> jax.Array:
+    """Prefilter a signature against every register of a bank -> scalar bool
+    (True iff any register's intersection is all-segments-nonempty)."""
+    return jnp.any(jax.vmap(lambda r: intersect_nonempty(spec, r, sig))(bank))
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    """Number of set bits in a packed signature (any shape, summed)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & np.uint32(1)
+    return jnp.sum(bits.astype(jnp.int32))
+
+
+def saturation(spec: SignatureSpec, sig: jax.Array) -> jax.Array:
+    """Fraction of bits set (Bloom-filter fill factor)."""
+    return popcount(sig) / spec.sig_bits
+
+
+def expected_membership_fp_rate(spec: SignatureSpec, n_inserted: int) -> float:
+    """Theoretical membership false-positive rate of the partitioned Bloom
+    filter after ``n_inserted`` distinct addresses."""
+    fill = 1.0 - (1.0 - 1.0 / spec.seg_bits) ** n_inserted
+    return float(fill**spec.num_segments)

@@ -1,0 +1,3 @@
+from repro.kernels.bloom.ops import bloom_insert, bloom_intersect, bloom_query
+
+__all__ = ["bloom_insert", "bloom_query", "bloom_intersect"]

@@ -1,0 +1,68 @@
+"""Jit'd public wrappers for the Bloom-signature kernels.
+
+On TPU the Pallas path is used; on CPU (this container) the pure-jnp oracle is
+the default execution path and the Pallas kernels run under
+``interpret=True`` for validation.  ``use_pallas=None`` auto-selects.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.signatures import SignatureSpec
+from repro.kernels.bloom import bloom as _pallas
+from repro.kernels.bloom import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "use_pallas"))
+def bloom_insert(
+    spec: SignatureSpec,
+    sig: jax.Array,
+    addrs: jax.Array,
+    mask: jax.Array | None = None,
+    use_pallas: bool | None = None,
+):
+    """Insert addresses into a packed signature (num_words,) uint32."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _pallas.bloom_insert_pallas(
+            spec, sig, addrs, mask, interpret=not _on_tpu()
+        )
+    return _ref.bloom_insert_ref(spec, sig, addrs, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "use_pallas"))
+def bloom_query(
+    spec: SignatureSpec,
+    sig: jax.Array,
+    addrs: jax.Array,
+    use_pallas: bool | None = None,
+):
+    """Membership test -> (N,) bool."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _pallas.bloom_query_pallas(spec, sig, addrs, interpret=not _on_tpu())
+    return _ref.bloom_query_ref(spec, sig, addrs)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "use_pallas"))
+def bloom_intersect(
+    spec: SignatureSpec,
+    a: jax.Array,
+    b: jax.Array,
+    use_pallas: bool | None = None,
+):
+    """Batched AND-prefilter (B, num_words) x2 -> (B,) bool."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _pallas.bloom_intersect_pallas(spec, a, b, interpret=not _on_tpu())
+    return _ref.bloom_intersect_ref(spec, a, b)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the Bloom-signature kernels.
+
+Canonical semantics live in :mod:`repro.core.signatures`; this module exposes
+them under the kernel API surface (batch-shaped, padded inputs) so the Pallas
+kernels in ``bloom.py`` can be checked with ``assert_allclose`` over
+shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import signatures as sig_lib
+from repro.core.signatures import SignatureSpec
+
+
+def bloom_insert_ref(
+    spec: SignatureSpec,
+    sig: jax.Array,
+    addrs: jax.Array,
+    mask: jax.Array | None = None,
+) -> jax.Array:
+    """Insert ``addrs`` (N,) into packed signature ``sig`` (num_words,)."""
+    return sig_lib.insert(spec, sig, addrs, mask=mask)
+
+
+def bloom_query_ref(
+    spec: SignatureSpec, sig: jax.Array, addrs: jax.Array
+) -> jax.Array:
+    """Membership of ``addrs`` (N,) in ``sig`` -> (N,) bool."""
+    return sig_lib.query(spec, sig, addrs)
+
+
+def bloom_intersect_ref(
+    spec: SignatureSpec, a: jax.Array, b: jax.Array
+) -> jax.Array:
+    """Batched AND-prefilter: a, b (B, num_words) -> (B,) bool, True iff every
+    segment of (a & b) is non-empty (a conflict *may* exist)."""
+    inter = (a & b).reshape(a.shape[0], spec.num_segments, spec.words_per_seg)
+    return jnp.all(jnp.any(inter != 0, axis=2), axis=1)

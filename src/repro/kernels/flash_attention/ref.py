@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the flash-attention kernel: the chunked-softmax
+implementation in repro.models.attention IS the memory-safe reference."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.attention import mha_chunked
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D) -> (B, Sq, Hq, D)."""
+    return mha_chunked(q, k, v, causal=causal, window=window)

@@ -1,0 +1,24 @@
+"""Jit'd wrapper for the lazy_merge kernel (Pallas on TPU, oracle on CPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.lazy_merge import lazy_merge as _pallas
+from repro.kernels.lazy_merge import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def lazy_merge(rows, base, valid, use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _pallas.lazy_merge_pallas(rows, base, valid,
+                                         interpret=not _on_tpu())
+    return _ref.lazy_merge_ref(rows, base, valid)

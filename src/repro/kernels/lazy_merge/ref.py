@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the LazySync row-merge kernel.
+
+Semantics (the per-word dirty-bit-mask merge of LazyPIM §4.1, lifted to
+embedding rows): given per-group speculative rows and the committed base,
+
+    merged[r] = base[r] + sum_g (rows[g, r] - base[r])   where valid[r]
+    merged[r] = base[r]                                  otherwise
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lazy_merge_ref(rows: jax.Array, base: jax.Array, valid: jax.Array) -> jax.Array:
+    """rows: (G, R, D); base: (R, D); valid: (R,) bool -> (R, D) float32."""
+    rows32 = rows.astype(jnp.float32)
+    base32 = base.astype(jnp.float32)
+    merged = base32 + jnp.sum(rows32 - base32[None], axis=0)
+    return jnp.where(valid[:, None], merged, base32)

@@ -1,0 +1,169 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This proves the distribution config is coherent without real hardware:
+``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` must succeed on the
+single-pod (16, 16) mesh AND the 2-pod (2, 16, 16) = 512-chip mesh for every
+assigned architecture and its applicable input shapes.  Failures here
+(sharding mismatch, OOM at compile, unsupported collective) are bugs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out out.json]
+
+NOTE: the XLA_FLAGS line above MUST run before any other import (jax locks
+the device count on first init); do not set it globally — smoke tests and
+benches must see 1 device.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, shapes_for
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps
+from repro.models import common as C
+from repro.models.model import Model
+from repro.optim import adamw
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               rules_override=None, cfg_override=None):
+    """Lower + compile one (arch, shape, mesh) cell.
+
+    Returns a dict with memory/cost analysis + the lowered HLO text (for the
+    roofline collective parser).  ``cfg_override`` substitutes a modified
+    ModelConfig (the roofline analysis lowers shallow unrolled variants)."""
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    rules = dict(mesh_lib.rules_for(mesh))
+    if rules_override:
+        rules.update(rules_override)
+
+    param_specs = model.param_specs()
+    abstract_params = C.abstract_params(param_specs)
+    param_sh = C.param_shardings(param_specs, mesh, rules)
+
+    t0 = time.time()
+    with C.sharding_ctx(mesh, rules):
+        if shape.mode == "train":
+            opt_cfg = adamw.AdamWConfig(moment_dtype=cfg.opt_dtype)
+            fn = steps.make_train_step(model, opt_cfg)
+            batch_specs = model.input_specs(shape_name, shape.seq_len,
+                                            shape.global_batch, "train")
+            opt_specs = adamw.abstract_state(param_specs, opt_cfg)
+            opt_sh = {"mu": param_sh, "nu": param_sh,
+                      "step": jax.sharding.NamedSharding(
+                          mesh, jax.sharding.PartitionSpec())}
+            batch_sh = steps.batch_shardings(mesh, batch_specs)
+            jitted = jax.jit(fn, in_shardings=(param_sh, opt_sh, batch_sh),
+                             out_shardings=None)
+            lowered = jitted.lower(abstract_params, opt_specs, batch_specs)
+        elif shape.mode == "prefill":
+            fn = steps.make_prefill_step(model)
+            batch_specs = model.input_specs(shape_name, shape.seq_len,
+                                            shape.global_batch, "prefill")
+            batch_sh = steps.batch_shardings(mesh, batch_specs)
+            jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh),
+                             out_shardings=None)
+            lowered = jitted.lower(abstract_params, batch_specs)
+        else:  # decode
+            fn = steps.make_decode_step(model)
+            specs = model.input_specs(shape_name, shape.seq_len,
+                                      shape.global_batch, "decode")
+            tok_sh = steps.batch_shardings(mesh, {"t": specs["token"]})["t"]
+            cache_sh = steps.cache_shardings(mesh, specs["cache"], cfg)
+            jitted = jax.jit(fn, in_shardings=(param_sh, tok_sh, cache_sh),
+                             out_shardings=None)
+            lowered = jitted.lower(abstract_params, specs["token"], specs["cache"])
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    out = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "compile_s": round(time.time() - t0, 1),
+        "flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+        "memory": _mem_dict(mem),
+        "params": model.param_count(),
+    }
+    return out, lowered, compiled
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cells(cells, multi_pod: bool, out_path: str | None,
+              hlo_dir: str | None = None):
+    results, failures = [], []
+    for arch, shape in cells:
+        try:
+            res, lowered, compiled = lower_cell(arch, shape, multi_pod=multi_pod)
+            print(f"OK   {arch:24s} {shape:12s} {res['mesh']:10s} "
+                  f"compile={res['compile_s']}s flops={res['flops']:.3e} "
+                  f"mem={res['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
+            if hlo_dir:
+                os.makedirs(hlo_dir, exist_ok=True)
+                tag = f"{arch}__{shape}__{res['mesh']}"
+                with open(os.path.join(hlo_dir, tag + ".hlo.txt"), "w") as f:
+                    f.write(compiled.as_text())
+            results.append(res)
+            del lowered, compiled
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"FAIL {arch:24s} {shape:12s}: {e}")
+            traceback.print_exc()
+            failures.append({"arch": arch, "shape": shape, "error": str(e)})
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump({"results": results, "failures": failures}, f, indent=1)
+    print(f"\n{len(results)} cells OK, {len(failures)} failed")
+    return results, failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--hlo-dir", default=None,
+                    help="dump compiled HLO per cell (roofline input)")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = []
+        for a in ARCHS:
+            for s in shapes_for(get_config(a)):
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch.replace("-", "_").replace(".", "_"), args.shape)]
+    _, failures = run_cells(cells, args.multi_pod, args.out, args.hlo_dir)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

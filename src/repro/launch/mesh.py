@@ -1,0 +1,56 @@
+"""Production mesh construction + logical-axis rules.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state.  The single-pod mesh
+is (data=16, model=16) = 256 chips; multi-pod adds a leading pod axis for
+2 x 256 = 512 chips.  The ``pod`` axis composes with ``data`` for
+FSDP+DP (batch and parameter sharding span both), so the same logical rules
+serve both meshes.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# Logical-axis -> mesh-axis rules.  Parameters FSDP-shard their embed dim
+# over data (and pod); vocab/heads/mlp/experts shard over model (TP/EP);
+# batch shards over (pod, data).
+LOGICAL_RULES_SINGLE: dict[str, Any] = {
+    "batch": ("data",),
+    "embed": ("data",),
+    "embed_table": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "rnn": ("model",),
+    "kv_seq": ("model",),
+    "seq_sp": ("model",),
+}
+
+LOGICAL_RULES_MULTI: dict[str, Any] = {
+    **LOGICAL_RULES_SINGLE,
+    "batch": ("pod", "data"),
+    "embed": ("data",),        # FSDP within a pod; pod axis replicates params
+}
+
+# Fully-sharded variant for the largest configs: parameters also shard the
+# embed dim over the pod axis (FSDP across pods; gathered through DCN).
+LOGICAL_RULES_MULTI_FSDP_POD: dict[str, Any] = {
+    **LOGICAL_RULES_MULTI,
+    "embed": ("pod", "data"),
+}
+
+
+def rules_for(mesh) -> dict[str, Any]:
+    return LOGICAL_RULES_MULTI if "pod" in mesh.axis_names else LOGICAL_RULES_SINGLE

@@ -1,0 +1,119 @@
+"""Step functions (train / prefill / decode) + sharding resolution.
+
+These are the functions the launcher jits and the dry-run lowers.  They are
+mesh-agnostic: sharding enters via in_shardings/out_shardings and the
+logical-rule ``sharding_ctx`` for internal constraints.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common as C
+from repro.models.model import Model
+from repro.optim import adamw
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state, metrics = adamw.step(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics}
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits, _ = model.apply(
+            params, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            frames=batch.get("frames"))
+        # serving prefill returns only the last position's logits
+        return logits[:, -1, :]
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, token, cache):
+        return model.decode(params, token, cache)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding resolution for non-parameter trees
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _div(n: int, mesh: Mesh, axes: tuple[str, ...]) -> bool:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return n % size == 0 and n >= size
+
+
+def batch_shardings(mesh: Mesh, batch_specs: dict) -> dict:
+    """Shard every batch input on its leading (global-batch) dim."""
+    ba = _batch_axes(mesh)
+
+    def f(s):
+        if s is None:
+            return None
+        spec = [None] * len(s.shape)
+        if _div(s.shape[0], mesh, ba):
+            spec[0] = ba
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(f, batch_specs)
+
+
+def cache_shardings(mesh: Mesh, cache_specs: dict, cfg: C.ModelConfig) -> dict:
+    """Decode-cache shardings: batch over (pod,data) when divisible; heads /
+    channels over model; for unshardable-head caches (MQA) the KV sequence
+    dim shards over model instead."""
+    ba = _batch_axes(mesh)
+    m = mesh.shape["model"]
+
+    def kv(s):
+        # (L, B, S, H, D)
+        spec: list[Any] = [None] * 5
+        if _div(s.shape[1], mesh, ba):
+            spec[1] = ba
+        if s.shape[3] % m == 0:
+            spec[3] = "model"
+        elif s.shape[2] % m == 0:
+            spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    def chan_last(s):
+        spec: list[Any] = [None] * len(s.shape)
+        if len(s.shape) >= 2 and _div(s.shape[1], mesh, ba):
+            spec[1] = ba
+        for i in (len(s.shape) - 1, len(s.shape) - 2):
+            if i > 1 and s.shape[i] % m == 0 and s.shape[i] >= 128:
+                spec[i] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    out: dict = {}
+    for key, sub in cache_specs.items():
+        if key == "len":
+            out[key] = NamedSharding(mesh, P())
+        elif key == "kv":
+            out[key] = {
+                "k": kv(sub["k"]), "v": kv(sub["v"]),
+                "pos": NamedSharding(mesh, P()),
+            }
+        elif key in ("ssm", "rec"):
+            out[key] = jax.tree.map(chan_last, sub)
+        else:
+            out[key] = jax.tree.map(lambda s: NamedSharding(mesh, P()), sub)
+    return out

@@ -1,0 +1,266 @@
+"""GQA attention: flash-style chunked softmax (train/prefill) + cached decode.
+
+The chunked implementation (``lax.scan`` over KV blocks with running
+max/sum/accumulator) is the memory-safe oracle used on every path — it never
+materializes an (S, S) score matrix, which is mandatory for the 32 K prefill
+and 500 K decode shapes.  ``repro.kernels.flash_attention`` provides the
+Pallas TPU kernel with identical semantics; models call through
+:func:`repro.kernels.flash_attention.ops.mha` which selects the backend.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _expand_kv(k: jax.Array, q_heads: int) -> jax.Array:
+    """(B, S, Hkv, D) -> (B, S, Hq, D) by repeating each kv head q/kv times."""
+    b, s, hkv, d = k.shape
+    rep = q_heads // hkv
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def mha_chunked(
+    q: jax.Array,              # (B, Sq, Hq, D)
+    k: jax.Array,              # (B, Sk, Hkv, D)
+    v: jax.Array,              # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: jax.Array | int = 0,
+    kv_chunk: int = 1024,
+    kv_valid_len: jax.Array | None = None,
+    k_positions: jax.Array | None = None,
+) -> jax.Array:
+    """Flash-style attention; returns (B, Sq, Hq, D).
+
+    ``q_offset``: absolute position of q[0] (decode: cache length so far).
+    ``kv_valid_len``: mask KV positions >= this (decode with preallocated cache).
+    ``k_positions``: (Sk,) absolute position of each cache slot (ring-buffer
+    decode for sliding-window layers); -1 marks empty slots.
+    """
+    b, sq, hq, d = q.shape
+    sk = k.shape[1]
+    k = _expand_kv(k, hq)
+    v = _expand_kv(v, hq)
+    scale = d ** -0.5
+
+    kv_chunk = min(kv_chunk, sk)
+    n_chunks = -(-sk // kv_chunk)
+    pad = n_chunks * kv_chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, hq, d)
+    vc = v.reshape(b, n_chunks, kv_chunk, hq, d)
+    if k_positions is not None:
+        kp = jnp.pad(k_positions, (0, pad), constant_values=-1)
+        kp = kp.reshape(n_chunks, kv_chunk)
+    else:
+        kp = None
+
+    q_pos = jnp.asarray(q_offset) + jnp.arange(sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        if kp is None:
+            idx, kb, vb = inputs
+            k_pos = idx * kv_chunk + jnp.arange(kv_chunk)
+            valid = k_pos < (sk if kv_valid_len is None else kv_valid_len)
+        else:
+            idx, kb, vb, k_pos = inputs
+            valid = k_pos >= 0
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb, preferred_element_type=jnp.float32)
+        s = s * scale
+        mask = jnp.ones((sq, kv_chunk), dtype=bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= k_pos[None, :] > (q_pos[:, None] - window)
+        mask &= valid[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (exp(NEG_INF - NEG_INF) would be NaN)
+        m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        alpha = jnp.where(m == NEG_INF, 0.0, jnp.exp(m - m_safe))
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    a0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+    idxs = jnp.arange(n_chunks)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    xs = (idxs, kc_t, vc_t) if kp is None else (idxs, kc_t, vc_t, kp)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (GQA + RoPE + optional qk-norm), train / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def attn_param_specs(cfg: C.ModelConfig, cross: bool = False) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs = {
+        "wq": C.ParamSpec((d, hq, hd), ("embed", "heads", None), cfg.param_dtype),
+        "wk": C.ParamSpec((d, hkv, hd), ("embed", "kv_heads", None), cfg.param_dtype),
+        "wv": C.ParamSpec((d, hkv, hd), ("embed", "kv_heads", None), cfg.param_dtype),
+        "wo": C.ParamSpec((hq, hd, d), ("heads", None, "embed"), cfg.param_dtype),
+        "norm": C.ParamSpec((d,), (None,), jnp.float32, "zeros"),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = C.ParamSpec((hd,), (None,), jnp.float32, "zeros")
+        specs["k_norm"] = C.ParamSpec((hd,), (None,), jnp.float32, "zeros")
+    return specs
+
+
+def _project_qkv(p, x, cfg: C.ModelConfig, positions, use_rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = C.rms_norm(q, p["q_norm"])
+        k = C.rms_norm(k, p["k_norm"])
+    if use_rope:
+        q = C.rope(q, positions, cfg.rope_theta)
+        k = C.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block(p, x, cfg: C.ModelConfig, *, window: int = 0, causal: bool = True,
+               positions=None):
+    """Self-attention over full sequence (train / prefill). x: (B,S,d)."""
+    b, s, _ = x.shape
+    h = C.rms_norm(x, p["norm"])
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, h, cfg, positions)
+    q = C.constrain(q, "batch", "seq", "heads", None)
+    k = C.constrain(k, "batch", "seq", "kv_heads", None)
+    out = mha_chunked(q, k, v, causal=causal, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return C.constrain(out, "batch", "seq", "embed")
+
+
+def cross_attn_block(p, x, enc_kv, cfg: C.ModelConfig):
+    """Cross-attention: q from decoder x, k/v precomputed from encoder."""
+    h = C.rms_norm(x, p["norm"])
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k, v = enc_kv
+    out = mha_chunked(q, k, v, causal=False)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return C.constrain(out, "batch", "seq", "embed")
+
+
+def encoder_kv(p, enc_out, cfg: C.ModelConfig):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return (k, v)
+
+
+def init_kv_cache(cfg: C.ModelConfig, batch: int, max_len: int, n_layers: int):
+    """Preallocated decode cache: (L, B, S, Hkv, D) k and v + slot positions.
+
+    When every attention layer is sliding-window, ``max_len`` should be the
+    window size and the cache acts as a ring buffer (``pos`` tracks the
+    absolute position stored in each slot; -1 = empty).
+    """
+    shape = (n_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, cfg.param_dtype),
+        "v": jnp.zeros(shape, cfg.param_dtype),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def _direct_decode_attention(q, k, v, cache_len, *, window: int = 0,
+                             k_positions: jax.Array | None = None):
+    """One-token attention over the full cache with NO kv-chunk scan.
+
+    The einsum -> masked softmax -> einsum chain preserves whatever sharding
+    the cache carries on its sequence dim: under SPMD a seq-sharded cache
+    costs only (B, H) stat all-reduces (flash-decoding), not a cache
+    all-gather.  q: (B, 1, Hq, D); k/v: (B, S, Hkv, D).
+    """
+    b, _, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    # grouped-head einsum: NO materialized GQA repeat of the cache (the
+    # repeat is what forced XLA into an involuntary cache reshard).
+    q5 = q.reshape(b, 1, hkv, g, d)
+    if k_positions is None:
+        k_pos = jnp.arange(sk)
+        valid = k_pos < cache_len + 1
+    else:
+        k_pos = k_positions
+        valid = k_pos >= 0
+    mask = valid & (k_pos <= cache_len)
+    if window > 0:
+        mask &= k_pos > (cache_len - window)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, k,
+                   preferred_element_type=jnp.float32) * (d ** -0.5)
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def attn_decode_block(p, x, cache_k, cache_v, cache_len, cfg: C.ModelConfig,
+                      *, window: int = 0, cache_pos: jax.Array | None = None):
+    """One-token decode step against a preallocated cache slice.
+
+    x: (B, 1, d); cache_k/v: (B, Smax, Hkv, D) for THIS layer.  When the
+    cache is smaller than the sequence (sliding-window ring buffer),
+    ``cache_pos`` (Smax,) carries each slot's absolute position and the new
+    token overwrites slot ``len % Smax``.  Returns (out, new_k, new_v,
+    new_pos).
+    """
+    smax = cache_k.shape[1]
+    positions = cache_len + jnp.zeros((x.shape[0], 1), jnp.int32)
+    h = C.rms_norm(x, p["norm"])
+    q, k, v = _project_qkv(p, h, cfg, positions)
+    slot = jax.lax.rem(cache_len, smax)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    if cache_pos is not None:
+        new_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache_pos, cache_len[None], slot, axis=0)
+        if cfg.decode_direct_attn:
+            out = _direct_decode_attention(q, new_k, new_v, cache_len,
+                                           window=window, k_positions=new_pos)
+        else:
+            out = mha_chunked(
+                q, new_k, new_v,
+                causal=True, window=window, q_offset=cache_len,
+                kv_chunk=4096, k_positions=new_pos,
+            )
+    else:
+        new_pos = None
+        if cfg.decode_direct_attn:
+            out = _direct_decode_attention(q, new_k, new_v, cache_len,
+                                           window=window)
+        else:
+            out = mha_chunked(
+                q, new_k, new_v,
+                causal=True, window=window, q_offset=cache_len,
+                kv_chunk=4096, kv_valid_len=cache_len + 1,
+            )
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return C.constrain(out, "batch", None, "embed"), new_k, new_v, new_pos

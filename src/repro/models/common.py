@@ -1,0 +1,368 @@
+"""Shared model substrate: configs, spec-driven params, norms, RoPE, masks.
+
+Design notes
+------------
+* **Spec-driven parameters.** Every architecture declares its parameters once
+  as a tree of :class:`ParamSpec` (shape + *logical axes* + dtype + init).
+  From that single source of truth we derive (a) materialized init for smoke
+  tests, (b) ``ShapeDtypeStruct`` trees for the multi-pod dry-run (no
+  allocation), and (c) ``PartitionSpec`` trees via the logical-axis rules in
+  ``repro.launch.mesh`` — the MaxText "logical axis" pattern without a flax
+  dependency.
+* **Sharding by constraint.** Inside jit, activations are annotated with
+  :func:`constrain` (logical axes -> ``with_sharding_constraint``).  Outside a
+  mesh context it is a no-op, so single-device tests run the same code path.
+* **bf16 by default** with fp32 norm/softmax accumulations (TPU-native mixed
+  precision).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical-axis machinery
+# ---------------------------------------------------------------------------
+
+# Default logical-axis -> mesh-axis rules (single-pod).  The launcher swaps in
+# multi-pod rules (see repro.launch.mesh.LOGICAL_RULES_*).
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("data",),
+    "embed": ("data",),      # FSDP: shard the d_model dim of weights over data
+    "embed_table": ("data",),  # the token-embedding's d dim (separable knob)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "seq": None,             # activations: sequence dim (SP shards this)
+    "seq_sp": ("model",),    # sequence-parallel boundary activations
+    "kv_seq": ("model",),    # decode KV cache: sequence dim
+    "rnn": ("model",),       # recurrent/SSM channel dim
+    "state": None,           # SSM state dim (16) — too small to shard
+    "layers": None,
+    "conv": None,
+    None: None,
+}
+
+
+class _ShardCtx(threading.local):
+    def __init__(self):
+        self.mesh: Mesh | None = None
+        self.rules: dict[str, Any] = dict(DEFAULT_RULES)
+
+
+_CTX = _ShardCtx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh | None, rules: dict[str, Any] | None = None):
+    """Activate a mesh + logical-rule set for constrain()/param_shardings()."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = {**DEFAULT_RULES, **(rules or {})}
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def _resolve_axes(logical_axes: tuple[Any, ...], rules, mesh,
+                  shape: tuple[int, ...] | None = None) -> P:
+    """Logical axes -> PartitionSpec.  A mesh axis is only assigned to a dim
+    when the dim size is divisible by the (cumulative) axis size — e.g. a
+    GQA model with 8 KV heads on a 16-way model axis simply replicates its
+    KV projections instead of failing to shard."""
+    used: set[str] = set()
+    out = []
+    for i, ax in enumerate(logical_axes):
+        mesh_ax = rules.get(ax, None)
+        if mesh_ax is None:
+            out.append(None)
+            continue
+        if isinstance(mesh_ax, str):
+            mesh_ax = (mesh_ax,)
+        picked: list[str] = []
+        size = 1
+        for m in mesh_ax:
+            if m not in mesh.axis_names or m in used:
+                continue
+            nxt = size * mesh.shape[m]
+            if shape is not None and shape[i] % nxt != 0:
+                continue
+            picked.append(m)
+            size = nxt
+        used.update(picked)
+        out.append(tuple(picked) if picked else None)
+    return P(*out)
+
+
+def logical_to_spec(logical_axes: tuple[Any, ...],
+                    shape: tuple[int, ...] | None = None) -> P:
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None:
+        return P()
+    return _resolve_axes(tuple(logical_axes), rules, mesh, shape)
+
+
+def constrain(x: jax.Array, *logical_axes: Any) -> jax.Array:
+    """with_sharding_constraint via logical axes; no-op without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = _resolve_axes(logical_axes, _CTX.rules, mesh, tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative parameter: shape + logical axes + dtype + init scale."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"        # normal | zeros | ones | small_normal
+    scale: float | None = None  # overrides fan-in scaling
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _materialize(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "small_normal":
+        std = spec.scale if spec.scale is not None else 0.02
+    else:  # fan-in normal
+        fan_in = spec.shape[0] if len(spec.shape) == 1 else int(np.prod(spec.shape[:-1]))
+        std = spec.scale if spec.scale is not None else (1.0 / max(1.0, fan_in)) ** 0.5
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def is_spec_leaf(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(spec_tree, rng: jax.Array):
+    """Materialize a ParamSpec tree into real arrays (smoke-test sizes)."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec_leaf)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(treedef, [_materialize(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStruct tree for the dry-run (never allocates)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=is_spec_leaf
+    )
+
+
+def param_shardings(spec_tree, mesh: Mesh, rules: dict[str, Any] | None = None):
+    """NamedSharding tree resolved from each param's logical axes."""
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _resolve_axes(s.axes, rules, mesh, s.shape)),
+        spec_tree,
+        is_leaf=is_spec_leaf,
+    )
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec_leaf)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    num_shared: int
+    top_k: int
+    d_expert: int
+    capacity_factor: float = 1.25
+    padded_experts: int | None = None  # pad for divisibility (router masked)
+
+    @property
+    def num_routed_padded(self) -> int:
+        return self.padded_experts or self.num_experts
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int | None = None  # defaults to ceil(d_model/16)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecurrentConfig:
+    lru_width: int
+    d_conv: int = 4
+    c_exponent: float = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One assigned architecture. Block kinds: 'attn', 'swa' (sliding-window
+    attention), 'moe', 'mamba', 'rglru'."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # block layout: homogeneous kind, or explicit pattern tuple
+    block_kind: str = "attn"
+    block_pattern: tuple[str, ...] | None = None
+    # attention details
+    window_size: int = 0             # for 'swa' blocks
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    # mlp
+    mlp_act: str = "swiglu"          # swiglu | relu2 | gelu
+    # subconfigs
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    recurrent: RecurrentConfig | None = None
+    # encoder-decoder
+    encoder_layers: int = 0
+    # modality frontend stub: number of prefix embeddings provided as input
+    frontend: str | None = None      # None | 'vision' | 'audio'
+    vision_tokens: int = 256
+    audio_downsample: int = 4
+    # embeddings
+    vocab_padded: int | None = None  # padded for TP divisibility
+    tie_embeddings: bool = True
+    # dtypes / memory policy
+    param_dtype: Any = jnp.bfloat16
+    opt_dtype: Any = jnp.float32     # AdamW moment dtype (bf16 for >100B)
+    remat: bool = True
+    # MoE dispatch: 'sort' = global argsort over (token, k) pairs (the
+    # textbook formulation; under SPMD the global sort costs large
+    # collective-permutes and the fp32 scatter-add combine all-reduces);
+    # 'cumsum' = rank-via-partitioned-cumsum + gather-based combine — no
+    # sort, no scatter-add (§Perf hillclimb on the collective term).
+    moe_dispatch: str = "sort"
+    # combine precision: fp32 (default) or bf16 — halves the combine-path
+    # all-reduce bytes (§Perf hillclimb on the collective term)
+    moe_combine_f32: bool = True
+    # decode attention: direct (unscanned) softmax over the KV cache — the
+    # einsum/softmax chain preserves the cache's sequence sharding, so a
+    # seq-sharded cache needs only tiny stat all-reduces (flash-decoding
+    # style) instead of an all-gather of the cache (§Perf hillclimb).
+    decode_direct_attn: bool = False
+    # loss chunking: compute logits+xent over sequence chunks of this size
+    # (0 = dense).  Avoids materializing the (B, S, V) logits tensor — the
+    # §Perf lever on the memory term for 150K-256K vocab archs.
+    loss_chunk: int = 0
+    # remat policy: 'nothing' saves nothing (max recompute, min memory);
+    # 'dots' saves matmul outputs (cuts the backward recompute to
+    # element-wise ops — the §Perf hillclimb lever on the memory term).
+    remat_policy: str = "nothing"
+    # scan-over-layers (compile-time flat in depth).  The roofline analysis
+    # lowers shallow UNROLLED variants (scan_layers=False) because XLA's
+    # cost_analysis counts a while-loop body once, not x trip-count.
+    scan_layers: bool = True
+    # long-context applicability (sub-quadratic backbones)
+    subquadratic: bool = False
+
+    @property
+    def vocab(self) -> int:
+        return self.vocab_padded or self.vocab_size
+
+    @property
+    def pattern(self) -> tuple[str, ...]:
+        if self.block_pattern is not None:
+            pat = self.block_pattern
+            reps = -(-self.num_layers // len(pat))
+            return (pat * reps)[: self.num_layers]
+        return (self.block_kind,) * self.num_layers
+
+    @property
+    def homogeneous(self) -> bool:
+        return len(set(self.pattern)) == 1
+
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(1, self.num_kv_heads)
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers (pure functions over params)
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    return jnp.concatenate([xr1, xr2], axis=-1).astype(x.dtype)
+
+
+def activation(name: str, x: jax.Array, gate: jax.Array | None = None) -> jax.Array:
+    if name == "swiglu":
+        assert gate is not None
+        return jax.nn.silu(gate) * x
+    if name == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+def causal_window_mask(q_pos: jax.Array, k_pos: jax.Array, window: int) -> jax.Array:
+    """(q, k) bool mask: causal, optionally limited to a trailing window."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab_real: int) -> jax.Array:
+    """Mean next-token xent; padded vocab rows masked out. logits (..., V)."""
+    logits = logits.astype(jnp.float32)
+    if vocab_real < logits.shape[-1]:
+        neg = jnp.finfo(jnp.float32).min
+        pad_mask = jnp.arange(logits.shape[-1]) >= vocab_real
+        logits = jnp.where(pad_mask, neg, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

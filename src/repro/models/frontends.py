@@ -1,0 +1,41 @@
+"""Modality frontend STUBS (per the brief).
+
+``[audio]`` / ``[vlm]`` architectures specify the transformer BACKBONE only;
+the modality frontend supplies precomputed frame/patch embeddings via
+``input_specs()``.  These helpers define the stub shapes and a deterministic
+synthetic embedding generator for smoke tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+
+
+def frontend_tokens(cfg: C.ModelConfig, seq_len: int | None = None) -> int:
+    """Number of prefix embeddings the frontend contributes."""
+    if cfg.frontend == "vision":
+        return cfg.vision_tokens
+    if cfg.frontend == "audio":
+        # encoder input: audio frames downsampled 4x from a nominal window
+        return (seq_len or 1024) // cfg.audio_downsample
+    return 0
+
+
+def frontend_spec(cfg: C.ModelConfig, batch: int, seq_len: int | None = None):
+    """ShapeDtypeStruct for the precomputed embeddings (dry-run input)."""
+    n = frontend_tokens(cfg, seq_len)
+    if n == 0:
+        return None
+    return jax.ShapeDtypeStruct((batch, n, cfg.d_model), jnp.bfloat16)
+
+
+def synth_embeddings(cfg: C.ModelConfig, batch: int, rng: jax.Array,
+                     seq_len: int | None = None) -> jax.Array | None:
+    n = frontend_tokens(cfg, seq_len)
+    if n == 0:
+        return None
+    return (jax.random.normal(rng, (batch, n, cfg.d_model), jnp.float32)
+            * 0.02).astype(jnp.bfloat16)

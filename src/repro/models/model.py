@@ -1,0 +1,117 @@
+"""Public model facade: one entry point per (architecture, execution mode).
+
+    model = Model(cfg)
+    params = model.init(rng)                   # smoke-test sizes
+    specs  = model.abstract()                  # ShapeDtypeStructs (dry-run)
+    logits, aux = model.apply(params, tokens)  # full-sequence forward
+    loss = model.loss(params, batch)           # next-token xent + MoE aux
+    cache = model.init_cache(batch, max_len)
+    logits, cache = model.decode(params, token, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models import frontends as F
+from repro.models import transformer as T
+
+MOE_AUX_WEIGHT = 0.01
+ROUTER_Z_WEIGHT = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: C.ModelConfig
+
+    # ---- parameters -------------------------------------------------------
+
+    def param_specs(self) -> dict:
+        return T.lm_param_specs(self.cfg)
+
+    def init(self, rng: jax.Array) -> dict:
+        return C.init_params(self.param_specs(), rng)
+
+    def abstract(self) -> dict:
+        return C.abstract_params(self.param_specs())
+
+    def shardings(self, mesh, rules=None):
+        return C.param_shardings(self.param_specs(), mesh, rules)
+
+    def param_count(self) -> int:
+        return C.param_count(self.param_specs())
+
+    # ---- forward ----------------------------------------------------------
+
+    def apply(self, params, tokens, prefix_embeds=None, frames=None):
+        cfg = self.cfg
+        if cfg.encoder_layers > 0:
+            assert frames is not None, "encoder-decoder needs encoder frames"
+            return T.encdec_forward(params, tokens, frames, cfg)
+        return T.forward(params, tokens, cfg, prefix_embeds=prefix_embeds)
+
+    def loss(self, params, batch: dict) -> jax.Array:
+        """batch: {tokens, labels, [frames|prefix_embeds]} -> scalar loss."""
+        cfg = self.cfg
+        if cfg.loss_chunk > 0 and cfg.encoder_layers == 0:
+            hidden, aux = T.forward_hidden(
+                params, batch["tokens"], cfg,
+                prefix_embeds=batch.get("prefix_embeds"))
+            loss = T.chunked_xent(params, hidden, batch["labels"], cfg)
+        else:
+            logits, aux = self.apply(
+                params, batch["tokens"],
+                prefix_embeds=batch.get("prefix_embeds"),
+                frames=batch.get("frames"))
+            loss = C.cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        if aux:
+            loss = (loss + MOE_AUX_WEIGHT * aux.get("load_balance", 0.0)
+                    + ROUTER_Z_WEIGHT * aux.get("router_z", 0.0))
+        return loss
+
+    # ---- serving ----------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        return T.init_cache(self.cfg, batch, max_len)
+
+    def decode(self, params, token, cache):
+        return T.decode_step(params, token, cache, self.cfg)
+
+    def prefill(self, params, tokens):
+        """Prefill forward (logits only; cache population is covered by the
+        dry-run through the full-sequence path)."""
+        return self.apply(params, tokens)
+
+    # ---- dry-run inputs ----------------------------------------------------
+
+    def input_specs(self, shape_name: str, seq_len: int, global_batch: int,
+                    mode: str) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+        mode: 'train' -> {tokens, labels, ...}; 'decode' -> {token, cache}.
+        """
+        cfg = self.cfg
+        if mode == "train" or mode == "prefill":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+            }
+            if mode == "train":
+                specs["labels"] = jax.ShapeDtypeStruct(
+                    (global_batch, seq_len), jnp.int32)
+            if cfg.encoder_layers > 0:
+                specs["frames"] = F.frontend_spec(cfg, global_batch, seq_len)
+            elif cfg.frontend is not None:
+                specs["prefix_embeds"] = F.frontend_spec(cfg, global_batch, seq_len)
+            return specs
+        if mode == "decode":
+            cache = jax.eval_shape(
+                lambda: T.init_cache(cfg, global_batch, seq_len))
+            return {
+                "token": jax.ShapeDtypeStruct((global_batch, 1), jnp.int32),
+                "cache": cache,
+            }
+        raise ValueError(mode)

@@ -1,0 +1,249 @@
+"""Mixture-of-Experts block: shared experts + routed top-k with capacity.
+
+Sort-based dispatch (the TPU-native formulation):
+
+1. router logits -> top-k (expert, weight) pairs per token
+2. flatten (token, k) pairs, sort by expert id
+3. rank-within-expert = position - segment start (static-shape cumsum math)
+4. tokens scatter into an (E, C, d) buffer (capacity overflow drops, like
+   Switch/GShard), experts run as one batched einsum, results scatter back
+   weighted by the gate.
+
+Everything is static-shape and jit/pjit friendly; experts shard over the
+``expert`` logical axis (EP over 'model'), tokens over ``batch``.
+
+Aux losses: load-balancing (Switch-style) + router z-loss, returned for the
+training objective.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+
+
+def moe_param_specs(cfg: C.ModelConfig) -> dict:
+    moe = cfg.moe
+    d = cfg.d_model
+    e = moe.num_routed_padded
+    de = moe.d_expert
+    dt = cfg.param_dtype
+    specs = {
+        "norm": C.ParamSpec((d,), (None,), jnp.float32, "zeros"),
+        "router": C.ParamSpec((d, e), ("embed", "expert"), jnp.float32,
+                              "small_normal", 0.02 / (d ** 0.5)),
+        # routed experts: SwiGLU, stacked on a leading expert dim
+        "we_in": C.ParamSpec((e, d, de), ("expert", "embed", "mlp"), dt),
+        "we_gate": C.ParamSpec((e, d, de), ("expert", "embed", "mlp"), dt),
+        "we_out": C.ParamSpec((e, de, d), ("expert", "mlp", "embed"), dt),
+    }
+    if moe.num_shared > 0:
+        ds = moe.num_shared * de
+        specs.update({
+            "ws_in": C.ParamSpec((d, ds), ("embed", "mlp"), dt),
+            "ws_gate": C.ParamSpec((d, ds), ("embed", "mlp"), dt),
+            "ws_out": C.ParamSpec((ds, d), ("mlp", "embed"), dt),
+        })
+    return specs
+
+
+def _routing(logits: jax.Array, num_experts: int, top_k: int, num_real: int):
+    """Top-k routing with padding-expert masking. logits: (T, E)."""
+    if num_real < num_experts:
+        pad = jnp.arange(num_experts) >= num_real
+        logits = jnp.where(pad, jnp.finfo(logits.dtype).min, logits)
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_e = jax.lax.top_k(gates, top_k)          # (T, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    return gates, top_w, top_e
+
+
+def _moe_block_ep(p, x: jax.Array, cfg: C.ModelConfig, mesh):
+    """Expert-parallel MoE via shard_map (the §Perf hillclimb winner).
+
+    Each device holds E/|model| experts and its data-shard's tokens
+    (activations are replicated over 'model' under the standard layout), so
+    dispatch is LOCAL: route + rank (local cumsum) + local capacity buffer +
+    local expert einsum.  The only cross-device step is a (T_local, d)
+    bf16 psum over 'model' to combine each token's k expert outputs —
+    megabytes per layer instead of the global sort's collective-permutes
+    and the fp32 scatter-add's multi-GB all-reduces.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    moe = cfg.moe
+    b, s, d = x.shape
+    e = moe.num_routed_padded
+    k = moe.top_k
+    m = mesh.shape["model"]
+    assert e % m == 0, (e, m)
+    e_local = e // m
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = 1
+    for a in batch_axes:
+        dp *= mesh.shape[a]
+    b_axes = batch_axes if (batch_axes and b % dp == 0) else ()
+    t_loc = (b // dp if b_axes else b) * s
+    cap = max(8, int(moe.capacity_factor * t_loc * k / e))
+
+    def local_fn(xb, norm, router, we_in, we_gate, we_out, ws):
+        bl, sl, _ = xb.shape
+        tl = bl * sl
+        h = C.rms_norm(xb, norm)
+        flat = h.reshape(tl, d)
+        logits = jnp.einsum("td,de->te", flat.astype(jnp.float32), router)
+        gates, top_w, top_e = _routing(logits, e, k, moe.num_experts)
+
+        me = jnp.mean(gates, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32), axis=0)
+        load_balance = e * jnp.sum(me * ce)
+        router_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+        onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32).sum(1)  # (tl, E)
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        rank = jnp.take_along_axis(pos, top_e, axis=1)             # (tl, K)
+        midx = jax.lax.axis_index("model")
+        loc_e = top_e - midx * e_local
+        mine = (loc_e >= 0) & (loc_e < e_local) & (rank < cap)
+        slot = jnp.where(mine, loc_e * cap + rank, e_local * cap)
+        buf = jnp.zeros((e_local * cap + 1, d), dtype=xb.dtype)
+        for kk in range(k):
+            buf = buf.at[slot[:, kk]].set(flat, mode="drop")
+        buf = buf[:-1].reshape(e_local, cap, d)
+
+        gate = jnp.einsum("ecd,edf->ecf", buf, we_gate)
+        up = jnp.einsum("ecd,edf->ecf", buf, we_in)
+        act = C.activation("swiglu", up, gate)
+        out_e = jnp.einsum("ecf,efd->ecd", act, we_out).reshape(e_local * cap, d)
+
+        gathered = out_e[jnp.where(mine, slot, 0)]                 # (tl, K, d)
+        w_m = jnp.where(mine, top_w, 0.0).astype(xb.dtype)
+        part = jnp.sum(gathered * w_m[..., None], axis=1)          # (tl, d)
+        combined = jax.lax.psum(part, "model")                     # tiny!
+
+        if moe.num_shared > 0:
+            ws_in, ws_gate, ws_out = ws
+            # shared expert: mlp dim sharded over model -> partial sums
+            sg = jnp.einsum("td,df->tf", flat, ws_gate)
+            su = jnp.einsum("td,df->tf", flat, ws_in)
+            shared = jnp.einsum("tf,fd->td", C.activation("swiglu", su, sg),
+                                ws_out)
+            combined = combined + jax.lax.psum(shared, "model")
+        out = combined.reshape(bl, sl, d).astype(xb.dtype)
+        aux = jnp.stack([load_balance, router_z])
+        return out, aux
+
+    x_spec = P(b_axes if b_axes else None, None, None)
+    ws_specs = (P(None, "model"), P(None, "model"), P("model", None)) \
+        if moe.num_shared > 0 else P()
+    ws_args = ((p["ws_in"], p["ws_gate"], p["ws_out"])
+               if moe.num_shared > 0 else ())
+    out, aux = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(x_spec, P(None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None), ws_specs),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["norm"], p["router"], p["we_in"], p["we_gate"], p["we_out"],
+      ws_args)
+    return out, {"load_balance": aux[0], "router_z": aux[1]}
+
+
+def moe_block(p, x: jax.Array, cfg: C.ModelConfig):
+    """x: (B, S, d) -> (out, aux) with aux = {load_balance, router_z}."""
+    if cfg.moe_dispatch == "ep":
+        mesh = C._CTX.mesh
+        if mesh is not None and "model" in mesh.axis_names \
+                and cfg.moe.num_routed_padded % mesh.shape["model"] == 0:
+            return _moe_block_ep(p, x, cfg, mesh)
+        # no mesh (smoke tests): fall through to the local formulation
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e = moe.num_routed_padded
+    k = moe.top_k
+    cap = max(8, int(moe.capacity_factor * t * k / e))
+
+    h = C.rms_norm(x, p["norm"])
+    flat = h.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", flat.astype(jnp.float32), p["router"])
+    gates, top_w, top_e = _routing(logits, e, k, moe.num_experts)
+
+    # --- aux losses (Switch §2.2 + z-loss) --------------------------------
+    me = jnp.mean(gates, axis=0)                                  # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32), axis=0)
+    load_balance = e * jnp.sum(me * ce)
+    router_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    if cfg.moe_dispatch == "cumsum":
+        # --- cumsum dispatch (no global sort, no scatter-add combine) ------
+        onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32).sum(1)   # (T, E)
+        pos = jnp.cumsum(onehot, axis=0) - onehot                   # (T, E)
+        rank = jnp.take_along_axis(pos, top_e, axis=1)              # (T, K)
+        keep = rank < cap
+        slot = jnp.where(keep, top_e * cap + rank, e * cap)         # (T, K)
+        buf = jnp.zeros((e * cap + 1, d), dtype=x.dtype)
+        for kk in range(k):
+            buf = buf.at[slot[:, kk]].set(flat, mode="drop")
+        buf = buf[:-1].reshape(e, cap, d)
+        buf = C.constrain(buf, "expert", None, "embed")
+
+        gate = jnp.einsum("ecd,edf->ecf", buf, p["we_gate"])
+        up = jnp.einsum("ecd,edf->ecf", buf, p["we_in"])
+        act = C.activation("swiglu", up, gate)
+        out_e = jnp.einsum("ecf,efd->ecd", act, p["we_out"]).reshape(e * cap, d)
+
+        # gather-based combine: (T, K) indexed reads, weighted sum over K
+        gathered = out_e[jnp.where(keep, slot, 0)]                  # (T, K, d)
+        w_masked = jnp.where(keep, top_w, 0.0).astype(jnp.float32)
+        combined = jnp.sum(gathered.astype(jnp.float32)
+                           * w_masked[..., None], axis=1)           # (T, d)
+    else:
+        # --- sort-based dispatch (textbook formulation; baseline) ----------
+        flat_e = top_e.reshape(-1)                                    # (T*K,)
+        flat_w = top_w.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(t), k)
+        order = jnp.argsort(flat_e, stable=True)
+        se, sw, stok = flat_e[order], flat_w[order], flat_tok[order]
+        # rank of each entry within its expert segment
+        pos = jnp.arange(t * k)
+        seg_start = jnp.searchsorted(se, jnp.arange(e), side="left")  # (E,)
+        rank = pos - seg_start[se]
+        keep = rank < cap
+        slot = se * cap + jnp.where(keep, rank, 0)                    # (T*K,)
+
+        # gather tokens into the (E*C, d) expert buffer
+        buf = jnp.zeros((e * cap, d), dtype=x.dtype)
+        src = jnp.where(keep, slot, e * cap)
+        buf = jnp.concatenate([buf, jnp.zeros((1, d), x.dtype)])
+        buf = buf.at[src].set(flat[stok], mode="drop")[:-1]
+        buf = buf.reshape(e, cap, d)
+        buf = C.constrain(buf, "expert", None, "embed")
+
+        gate = jnp.einsum("ecd,edf->ecf", buf, p["we_gate"])
+        up = jnp.einsum("ecd,edf->ecf", buf, p["we_in"])
+        act = C.activation("swiglu", up, gate)
+        out_e = jnp.einsum("ecf,efd->ecd", act, p["we_out"]).reshape(e * cap, d)
+
+        cdt = jnp.float32 if cfg.moe_combine_f32 else x.dtype
+        gathered = out_e[jnp.where(keep, slot, 0)] * jnp.where(keep, sw, 0.0)[:, None].astype(x.dtype)
+        combined = jnp.zeros((t, d), dtype=cdt)
+        combined = combined.at[stok].add(gathered.astype(cdt))
+        combined = C.constrain(combined.reshape(b, s, d), "batch", "seq",
+                               "embed").reshape(t, d)
+
+    # --- shared experts (always-on dense SwiGLU) ----------------------------
+    if moe.num_shared > 0:
+        sg = jnp.einsum("td,df->tf", flat, p["ws_gate"])
+        su = jnp.einsum("td,df->tf", flat, p["ws_in"])
+        shared = jnp.einsum("tf,fd->td", C.activation("swiglu", su, sg), p["ws_out"])
+        combined = combined + shared.astype(jnp.float32)
+
+    out = combined.reshape(b, s, d).astype(x.dtype)
+    out = C.constrain(out, "batch", "seq", "embed")
+    return out, {"load_balance": load_balance, "router_z": router_z}

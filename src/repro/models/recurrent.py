@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin family).
+
+The Griffin recurrent block: two parallel branches — a GeLU gate branch and
+a recurrence branch (linear -> short causal conv -> RG-LRU) — multiplied and
+projected out.  The RG-LRU diagonal recurrence
+
+    a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+runs under ``associative_scan`` for train/prefill and carries (conv_state,
+h) for O(1) decode — sub-quadratic, so ``long_500k`` is in scope.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+
+
+def rglru_param_specs(cfg: C.ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.recurrent.lru_width
+    dc = cfg.recurrent.d_conv
+    dt = cfg.param_dtype
+    return {
+        "norm": C.ParamSpec((d,), (None,), jnp.float32, "zeros"),
+        "w_gate": C.ParamSpec((d, w), ("embed", "rnn"), dt),
+        "w_rec": C.ParamSpec((d, w), ("embed", "rnn"), dt),
+        "conv_w": C.ParamSpec((dc, w), (None, "rnn"), dt, "small_normal", 0.1),
+        "conv_b": C.ParamSpec((w,), ("rnn",), dt, "zeros"),
+        "w_a": C.ParamSpec((w, w), ("rnn", None), dt, "small_normal", 0.02),
+        "w_i": C.ParamSpec((w, w), ("rnn", None), dt, "small_normal", 0.02),
+        "lam": C.ParamSpec((w,), ("rnn",), jnp.float32, "small_normal", 0.65),
+        "w_out": C.ParamSpec((w, d), ("rnn", "embed"), dt),
+    }
+
+
+def _rglru_terms(p, xc: jax.Array, cfg: C.ModelConfig):
+    """Recurrence coefficients. xc: (B, S, w) -> (a, bx) float32."""
+    c = cfg.recurrent.c_exponent
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, p["w_i"]).astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = i * xc.astype(jnp.float32)
+    bx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * gated
+    return a, bx
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def rglru_block(p, x: jax.Array, cfg: C.ModelConfig) -> jax.Array:
+    """Full-sequence Griffin recurrent block. x: (B,S,d)."""
+    h = C.rms_norm(x, p["norm"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, p["w_gate"]))
+    rec = jnp.einsum("bsd,dw->bsw", h, p["w_rec"])
+    rec = C.constrain(rec, "batch", "seq", "rnn")
+    xc = _causal_conv(rec, p["conv_w"], p["conv_b"])
+
+    a, bx = _rglru_terms(p, xc, cfg)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    hs = jax.lax.associative_scan(combine, (a, bx), axis=1)[1]
+    y = hs.astype(x.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    return C.constrain(out, "batch", "seq", "embed")
+
+
+def init_rglru_cache(cfg: C.ModelConfig, batch: int, n_layers: int):
+    w = cfg.recurrent.lru_width
+    dc = cfg.recurrent.d_conv
+    return {
+        "conv": jnp.zeros((n_layers, batch, dc - 1, w), cfg.param_dtype),
+        "h": jnp.zeros((n_layers, batch, w), jnp.float32),
+    }
+
+
+def rglru_decode_block(p, x: jax.Array, conv_state: jax.Array, h_state: jax.Array,
+                       cfg: C.ModelConfig):
+    """One-token decode. x: (B,1,d); conv_state: (B,K-1,w); h_state: (B,w)."""
+    h = C.rms_norm(x, p["norm"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, p["w_gate"]))
+    rec = jnp.einsum("bsd,dw->bsw", h, p["w_rec"])
+    window = jnp.concatenate([conv_state, rec], axis=1)
+    xc = (jnp.einsum("bkw,kw->bw", window, p["conv_w"]) + p["conv_b"])[:, None, :]
+    new_conv = window[:, 1:, :]
+
+    a, bx = _rglru_terms(p, xc, cfg)
+    new_h = a[:, 0] * h_state + bx[:, 0]
+    y = new_h[:, None, :].astype(x.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    return C.constrain(out, "batch", None, "embed"), new_conv, new_h

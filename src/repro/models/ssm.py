@@ -1,0 +1,122 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b backbone).
+
+Training/prefill uses ``jax.lax.associative_scan`` over the diagonal
+recurrence h_t = dA_t * h_{t-1} + dB_t x_t (O(log S) depth, TPU-friendly);
+decode carries (conv_state, ssm_state) and costs O(1) per token — which is
+what makes the ``long_500k`` shape tractable for this architecture.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as C
+
+
+def _d_inner(cfg: C.ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def _dt_rank(cfg: C.ModelConfig) -> int:
+    return cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+
+
+def ssm_param_specs(cfg: C.ModelConfig) -> dict:
+    d = cfg.d_model
+    di = _d_inner(cfg)
+    ds = cfg.ssm.d_state
+    dr = _dt_rank(cfg)
+    dc = cfg.ssm.d_conv
+    dt = cfg.param_dtype
+    return {
+        "norm": C.ParamSpec((d,), (None,), jnp.float32, "zeros"),
+        "w_in": C.ParamSpec((d, 2 * di), ("embed", "rnn"), dt),       # x and z
+        "conv_w": C.ParamSpec((dc, di), (None, "rnn"), dt, "small_normal", 0.1),
+        "conv_b": C.ParamSpec((di,), ("rnn",), dt, "zeros"),
+        "w_x": C.ParamSpec((di, dr + 2 * ds), ("rnn", None), dt),     # dt, B, C
+        "w_dt": C.ParamSpec((dr, di), (None, "rnn"), dt),
+        "dt_bias": C.ParamSpec((di,), ("rnn",), jnp.float32, "ones"),
+        "a_log": C.ParamSpec((di, ds), ("rnn", "state"), jnp.float32,
+                             "small_normal", 0.5),
+        "d_skip": C.ParamSpec((di,), ("rnn",), jnp.float32, "ones"),
+        "w_out": C.ParamSpec((di, d), ("rnn", "embed"), dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x: (B, S, di); w: (K, di)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _selective_terms(p, x_conv: jax.Array, cfg: C.ModelConfig):
+    """dt/B/C projections -> discretized (dA, dBx). x_conv: (B, S, di)."""
+    ds = cfg.ssm.d_state
+    dr = _dt_rank(cfg)
+    proj = jnp.einsum("bsd,de->bse", x_conv, p["w_x"])
+    dt_r, b_mat, c_mat = jnp.split(proj, [dr, dr + ds], axis=-1)
+    dt_full = jnp.einsum("bsr,rd->bsd", dt_r, p["w_dt"]).astype(jnp.float32)
+    dt_full = jax.nn.softplus(dt_full + p["dt_bias"])          # (B,S,di)
+    a = -jnp.exp(p["a_log"])                                   # (di, ds)
+    dA = jnp.exp(dt_full[..., None] * a)                       # (B,S,di,ds)
+    dBx = (dt_full * x_conv.astype(jnp.float32))[..., None] * \
+        b_mat.astype(jnp.float32)[..., None, :]                # (B,S,di,ds)
+    return dA, dBx, c_mat
+
+
+def ssm_block(p, x: jax.Array, cfg: C.ModelConfig) -> jax.Array:
+    """Full-sequence Mamba block. x: (B, S, d) -> (B, S, d)."""
+    h = C.rms_norm(x, p["norm"])
+    xz = jnp.einsum("bsd,de->bse", h, p["w_in"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = C.constrain(xs, "batch", "seq", "rnn")
+    x_conv = jax.nn.silu(_causal_conv(xs, p["conv_w"], p["conv_b"]))
+
+    dA, dBx, c_mat = _selective_terms(p, x_conv, cfg)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)[1]  # (B,S,di,ds)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, c_mat.astype(jnp.float32))
+    y = y + p["d_skip"] * x_conv.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return C.constrain(out, "batch", "seq", "embed")
+
+
+def init_ssm_cache(cfg: C.ModelConfig, batch: int, n_layers: int):
+    di, ds, dc = _d_inner(cfg), cfg.ssm.d_state, cfg.ssm.d_conv
+    return {
+        "conv": jnp.zeros((n_layers, batch, dc - 1, di), cfg.param_dtype),
+        "ssm": jnp.zeros((n_layers, batch, di, ds), jnp.float32),
+    }
+
+
+def ssm_decode_block(p, x: jax.Array, conv_state: jax.Array,
+                     ssm_state: jax.Array, cfg: C.ModelConfig):
+    """One-token decode. x: (B, 1, d); conv_state: (B, K-1, di);
+    ssm_state: (B, di, ds).  Returns (out, new_conv, new_ssm)."""
+    h = C.rms_norm(x, p["norm"])
+    xz = jnp.einsum("bsd,de->bse", h, p["w_in"])
+    xs, z = jnp.split(xz, 2, axis=-1)                # (B,1,di)
+    window = jnp.concatenate([conv_state, xs], axis=1)   # (B,K,di)
+    conv = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    x_conv = jax.nn.silu(conv)[:, None, :]               # (B,1,di)
+    new_conv = window[:, 1:, :]
+
+    dA, dBx, c_mat = _selective_terms(p, x_conv, cfg)
+    new_ssm = dA[:, 0] * ssm_state + dBx[:, 0]           # (B,di,ds)
+    y = jnp.einsum("bdn,bn->bd", new_ssm, c_mat[:, 0].astype(jnp.float32))
+    y = y + p["d_skip"] * x_conv[:, 0].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z[:, 0])
+    out = jnp.einsum("be,ed->bd", y, p["w_out"])[:, None, :]
+    return C.constrain(out, "batch", None, "embed"), new_conv, new_ssm

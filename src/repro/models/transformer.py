@@ -1,0 +1,452 @@
+"""Model stack assembly: blocks -> scan-over-layers -> logits.
+
+A block = mixer (+ optional FFN), each with its own pre-norm and residual:
+
+    kind 'attn'  : GQA attention            + dense MLP
+    kind 'swa'   : sliding-window attention + dense MLP
+    kind 'moe'   : GQA attention            + MoE FFN (shared + routed)
+    kind 'mamba' : Mamba selective SSM mixer (no separate FFN)
+    kind 'rglru' : Griffin RG-LRU recurrent  + dense MLP
+
+Layer iteration: the block pattern's smallest repeating unit (the *period*)
+is stacked on a leading axis and iterated with ``jax.lax.scan`` (+remat),
+keeping compile time flat in depth; the non-divisible tail is unrolled.
+Decode paths unroll all layers (per-token graphs are small) and carry
+heterogeneous caches (KV / conv+ssm / conv+h per kind).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import common as C
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.models import ssm as S
+
+
+def _remat_policy(cfg: C.ModelConfig):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_param_specs(cfg: C.ModelConfig) -> dict:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    specs = {
+        "norm": C.ParamSpec((d,), (None,), jnp.float32, "zeros"),
+        "w_in": C.ParamSpec((d, f), ("embed", "mlp"), dt),
+        "w_out": C.ParamSpec((f, d), ("mlp", "embed"), dt),
+    }
+    if cfg.mlp_act == "swiglu":
+        specs["w_gate"] = C.ParamSpec((d, f), ("embed", "mlp"), dt)
+    return specs
+
+
+def mlp_block(p, x: jax.Array, cfg: C.ModelConfig) -> jax.Array:
+    h = C.rms_norm(x, p["norm"])
+    up = jnp.einsum("bsd,df->bsf", h, p["w_in"])
+    up = C.constrain(up, "batch", "seq", "mlp")
+    gate = jnp.einsum("bsd,df->bsf", h, p["w_gate"]) if cfg.mlp_act == "swiglu" else None
+    act = C.activation(cfg.mlp_act, up, gate)
+    out = jnp.einsum("bsf,fd->bsd", act, p["w_out"])
+    return C.constrain(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def block_param_specs(kind: str, cfg: C.ModelConfig) -> dict:
+    if kind in ("attn", "swa"):
+        return {"mixer": A.attn_param_specs(cfg), "mlp": mlp_param_specs(cfg)}
+    if kind == "moe":
+        return {"mixer": A.attn_param_specs(cfg), "moe": M.moe_param_specs(cfg)}
+    if kind == "mamba":
+        return {"mixer": S.ssm_param_specs(cfg)}
+    if kind == "rglru":
+        return {"mixer": R.rglru_param_specs(cfg), "mlp": mlp_param_specs(cfg)}
+    raise ValueError(kind)
+
+
+def apply_block(kind: str, p, x: jax.Array, cfg: C.ModelConfig,
+                positions=None) -> tuple[jax.Array, dict]:
+    aux = {}
+    if kind in ("attn", "swa"):
+        window = cfg.window_size if kind == "swa" else 0
+        x = x + A.attn_block(p["mixer"], x, cfg, window=window, positions=positions)
+        x = x + mlp_block(p["mlp"], x, cfg)
+    elif kind == "moe":
+        x = x + A.attn_block(p["mixer"], x, cfg, positions=positions)
+        out, aux = M.moe_block(p["moe"], x, cfg)
+        x = x + out
+    elif kind == "mamba":
+        x = x + S.ssm_block(p["mixer"], x, cfg)
+    elif kind == "rglru":
+        x = x + R.rglru_block(p["mixer"], x, cfg)
+        x = x + mlp_block(p["mlp"], x, cfg)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Pattern / period machinery
+# ---------------------------------------------------------------------------
+
+
+def _period(cfg: C.ModelConfig) -> tuple[str, ...]:
+    if cfg.block_pattern is not None:
+        return cfg.block_pattern
+    return (cfg.block_kind,)
+
+
+def _split_layers(cfg: C.ModelConfig) -> tuple[int, tuple[str, ...]]:
+    """(number of full scanned periods, unrolled tail kinds)."""
+    per = _period(cfg)
+    n_full = cfg.num_layers // len(per)
+    tail = cfg.pattern[n_full * len(per):]
+    return n_full, tail
+
+
+def _stack_specs(specs: dict, n: int) -> dict:
+    """Add a leading (n,) 'layers' axis to every ParamSpec leaf."""
+    def f(s: C.ParamSpec) -> C.ParamSpec:
+        return C.ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype,
+                           s.init, s.scale)
+    return jax.tree.map(f, specs, is_leaf=C.is_spec_leaf)
+
+
+def stack_param_specs(cfg: C.ModelConfig) -> dict:
+    """Parameter tree of the decoder stack (no embeddings)."""
+    per = _period(cfg)
+    n_full, tail = _split_layers(cfg)
+    specs: dict[str, Any] = {
+        "period": [
+            _stack_specs(block_param_specs(kind, cfg), n_full) for kind in per
+        ],
+        "tail": [block_param_specs(kind, cfg) for kind in tail],
+        "final_norm": C.ParamSpec((cfg.d_model,), (None,), jnp.float32, "zeros"),
+    }
+    return specs
+
+
+def apply_stack(params, x: jax.Array, cfg: C.ModelConfig,
+                positions=None) -> tuple[jax.Array, dict]:
+    """Run the full block stack. Returns (hidden, aux_losses)."""
+    per = _period(cfg)
+    n_full, tail = _split_layers(cfg)
+
+    def superblock(x, layer_params):
+        aux_sum = jnp.zeros((2,), jnp.float32)
+        for kind, p in zip(per, layer_params):
+            x, aux = apply_block(kind, p, x, cfg, positions=positions)
+            if aux:
+                aux_sum = aux_sum + jnp.stack(
+                    [aux["load_balance"], aux["router_z"]])
+        return x, aux_sum
+
+    body = superblock
+    if cfg.remat:
+        body = jax.checkpoint(superblock, policy=_remat_policy(cfg))
+
+    if n_full > 0 and cfg.scan_layers:
+        def scan_fn(carry, layer_params):
+            y, aux = body(carry, layer_params)
+            return y, aux
+
+        x, aux_stack = jax.lax.scan(scan_fn, x, params["period"])
+        aux_sum = jnp.sum(aux_stack, axis=0)
+    elif n_full > 0:
+        aux_sum = jnp.zeros((2,), jnp.float32)
+        for i in range(n_full):
+            li = jax.tree.map(lambda a: a[i], params["period"])
+            x, aux_i = body(x, li)
+            aux_sum = aux_sum + aux_i
+    else:
+        aux_sum = jnp.zeros((2,), jnp.float32)
+
+    for kind, p in zip(tail, params["tail"]):
+        x, aux = apply_block(kind, p, x, cfg, positions=positions)
+        if aux:
+            aux_sum = aux_sum + jnp.stack([aux["load_balance"], aux["router_z"]])
+
+    x = C.rms_norm(x, params["final_norm"])
+    n_moe = sum(1 for k in cfg.pattern if k == "moe")
+    return x, {"load_balance": aux_sum[0] / max(n_moe, 1),
+               "router_z": aux_sum[1] / max(n_moe, 1)}
+
+
+# ---------------------------------------------------------------------------
+# LM: embeddings + stack + logits
+# ---------------------------------------------------------------------------
+
+
+def lm_param_specs(cfg: C.ModelConfig) -> dict:
+    specs = {
+        "embed": C.ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed_table"),
+                             cfg.param_dtype, "small_normal"),
+        "stack": stack_param_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = C.ParamSpec((cfg.d_model, cfg.vocab),
+                                       ("embed", "vocab"), cfg.param_dtype)
+    if cfg.encoder_layers > 0:
+        enc_cfg = cfg
+        specs["encoder"] = {
+            "blocks": _stack_specs(
+                {"mixer": A.attn_param_specs(enc_cfg),
+                 "mlp": mlp_param_specs(enc_cfg)},
+                cfg.encoder_layers),
+            "final_norm": C.ParamSpec((cfg.d_model,), (None,), jnp.float32, "zeros"),
+        }
+        # per-decoder-layer cross attention (stacked like the period scan)
+        n_full, tail = _split_layers(cfg)
+        specs["cross"] = {
+            "period": _stack_specs(A.attn_param_specs(cfg, cross=True), n_full),
+            "tail": [A.attn_param_specs(cfg, cross=True) for _ in tail],
+        }
+    return specs
+
+
+def embed_tokens(params, tokens: jax.Array, cfg: C.ModelConfig) -> jax.Array:
+    x = params["embed"][tokens] * jnp.asarray(
+        cfg.d_model ** 0.5, cfg.param_dtype)
+    return C.constrain(x, "batch", "seq", "embed")
+
+
+def logits_from_hidden(params, x: jax.Array, cfg: C.ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return C.constrain(logits, "batch", "seq", "vocab")
+
+
+def forward_hidden(params, tokens: jax.Array, cfg: C.ModelConfig,
+                   prefix_embeds: jax.Array | None = None):
+    """Decoder-only forward up to the final hidden states (pre-logits)."""
+    x = embed_tokens(params, tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x, aux = apply_stack(params["stack"], x, cfg)
+    if prefix_embeds is not None:
+        x = x[:, prefix_embeds.shape[1]:, :]
+    return x, aux
+
+
+def forward(params, tokens: jax.Array, cfg: C.ModelConfig,
+            prefix_embeds: jax.Array | None = None):
+    """Decoder-only forward. tokens: (B, S) -> (logits, aux).
+
+    ``prefix_embeds`` (B, P, d): modality-frontend stub outputs (vision
+    patches / audio frames) prepended to the token embeddings.
+    """
+    x, aux = forward_hidden(params, tokens, cfg, prefix_embeds)
+    return logits_from_hidden(params, x, cfg), aux
+
+
+def chunked_xent(params, hidden: jax.Array, labels: jax.Array,
+                 cfg: C.ModelConfig) -> jax.Array:
+    """Next-token xent over sequence chunks: never materializes the full
+    (B, S, V) logits; each chunk is rematerialized in the backward."""
+    b, s, d = hidden.shape
+    ck = cfg.loss_chunk
+    n = -(-s // ck)
+    pad = n * ck - s
+    h = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    lab = jnp.pad(labels, ((0, 0), (0, pad)))
+    msk = jnp.pad(jnp.ones((b, s), jnp.float32), ((0, 0), (0, pad)))
+    hc = jnp.moveaxis(h.reshape(b, n, ck, d), 1, 0)
+    lc = jnp.moveaxis(lab.reshape(b, n, ck), 1, 0)
+    mc = jnp.moveaxis(msk.reshape(b, n, ck), 1, 0)
+
+    @jax.checkpoint
+    def chunk_loss(hx, lx, mx):
+        logits = logits_from_hidden(params, hx, cfg).astype(jnp.float32)
+        if cfg.vocab_size < logits.shape[-1]:
+            neg = jnp.finfo(jnp.float32).min
+            pad_mask = jnp.arange(logits.shape[-1]) >= cfg.vocab_size
+            logits = jnp.where(pad_mask, neg, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * mx)
+
+    def body(tot, xs):
+        hx, lx, mx = xs
+        return tot + chunk_loss(hx, lx, mx), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc, mc))
+    return tot / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (seamless)
+# ---------------------------------------------------------------------------
+
+
+def encode(params, frames: jax.Array, cfg: C.ModelConfig) -> jax.Array:
+    """Bidirectional encoder over precomputed frame embeddings (B, Se, d)."""
+    enc = params["encoder"]
+
+    def block(x, p):
+        x = x + A.attn_block(p["mixer"], x, cfg, causal=False)
+        x = x + mlp_block(p["mlp"], x, cfg)
+        return x, None
+
+    body = block
+    if cfg.remat:
+        body = jax.checkpoint(block, policy=_remat_policy(cfg))
+    x = frames.astype(cfg.param_dtype)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, enc["blocks"])
+    else:
+        for i in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], enc["blocks"]))
+    return C.rms_norm(x, enc["final_norm"])
+
+
+def encdec_forward(params, tokens: jax.Array, frames: jax.Array,
+                   cfg: C.ModelConfig):
+    """Encoder-decoder forward: (B,S) tokens + (B,Se,d) frames -> logits."""
+    enc_out = encode(params, frames, cfg)
+    x = embed_tokens(params, tokens, cfg)
+    per = _period(cfg)
+    n_full, tail = _split_layers(cfg)
+
+    def superblock(x, ps):
+        layer_params, cross_p = ps
+        for kind, p in zip(per, layer_params):
+            x, _ = apply_block(kind, p, x, cfg)
+        x = x + A.cross_attn_block(cross_p, x, A.encoder_kv(cross_p, enc_out, cfg), cfg)
+        return x, None
+
+    body = superblock
+    if cfg.remat:
+        body = jax.checkpoint(superblock, policy=_remat_policy(cfg))
+    if n_full > 0 and cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x,
+                            (params["stack"]["period"], params["cross"]["period"]))
+    elif n_full > 0:
+        for i in range(n_full):
+            ps = jax.tree.map(lambda a: a[i],
+                              (params["stack"]["period"], params["cross"]["period"]))
+            x, _ = body(x, ps)
+    for (kind, p), cp in zip(zip(tail, params["stack"]["tail"]),
+                             params["cross"]["tail"]):
+        x, _ = apply_block(kind, p, x, cfg)
+        x = x + A.cross_attn_block(cp, x, A.encoder_kv(cp, enc_out, cfg), cfg)
+    x = C.rms_norm(x, params["stack"]["final_norm"])
+    return logits_from_hidden(params, x, cfg), {}
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, per-layer caches, unrolled layers)
+# ---------------------------------------------------------------------------
+
+
+def _ring_cache(cfg: C.ModelConfig) -> bool:
+    """True when every attention layer is sliding-window: the KV cache is a
+    window-sized ring buffer with per-slot absolute positions."""
+    attn_kinds = [k for k in cfg.pattern if k in ("attn", "swa", "moe")]
+    return bool(attn_kinds) and all(k == "swa" for k in attn_kinds) \
+        and cfg.window_size > 0
+
+
+def init_cache(cfg: C.ModelConfig, batch: int, max_len: int) -> dict:
+    """Heterogeneous decode cache: one slot per layer by kind index."""
+    kinds = cfg.pattern
+    n_attn = sum(1 for k in kinds if k in ("attn", "swa", "moe"))
+    n_ssm = sum(1 for k in kinds if k == "mamba")
+    n_rec = sum(1 for k in kinds if k == "rglru")
+    cache: dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+    if n_attn:
+        # When every attention layer is sliding-window, the KV cache is a
+        # window-sized ring buffer — this is what keeps long_500k decode
+        # state O(window) for the hybrid archs.
+        size = min(max_len, cfg.window_size) if _ring_cache(cfg) else max_len
+        cache["kv"] = A.init_kv_cache(cfg, batch, size, n_attn)
+    if n_ssm:
+        cache["ssm"] = S.init_ssm_cache(cfg, batch, n_ssm)
+    if n_rec:
+        cache["rec"] = R.init_rglru_cache(cfg, batch, n_rec)
+    return cache
+
+
+def _layer_params(params, cfg: C.ModelConfig, i: int):
+    """Extract layer i's params from the period/tail structure."""
+    per = _period(cfg)
+    n_full, _ = _split_layers(cfg)
+    n_scanned = n_full * len(per)
+    if i < n_scanned:
+        block_idx, pos = divmod(i, len(per))
+        return jax.tree.map(lambda a: a[block_idx], params["period"][pos])
+    return params["tail"][i - n_scanned]
+
+
+def decode_step(params, token: jax.Array, cache: dict, cfg: C.ModelConfig):
+    """One decode step. token: (B, 1) -> (logits (B,1,V), new_cache)."""
+    x = embed_tokens(params, token, cfg)
+    kinds = cfg.pattern
+    new_cache = dict(cache)
+    i_attn = i_ssm = i_rec = 0
+    kv = dict(cache["kv"]) if "kv" in cache else None
+    ssm = dict(cache["ssm"]) if "ssm" in cache else None
+    rec = dict(cache["rec"]) if "rec" in cache else None
+    clen = cache["len"]
+
+    for i, kind in enumerate(kinds):
+        p = _layer_params(params["stack"], cfg, i)
+        if kind in ("attn", "swa", "moe"):
+            window = cfg.window_size if kind == "swa" else 0
+            ring = _ring_cache(cfg)
+            out, nk, nv, npos = A.attn_decode_block(
+                p["mixer"], x, kv["k"][i_attn], kv["v"][i_attn], clen, cfg,
+                window=window, cache_pos=kv["pos"] if ring else None)
+            kv["k"] = kv["k"].at[i_attn].set(nk)
+            kv["v"] = kv["v"].at[i_attn].set(nv)
+            if npos is not None:
+                kv["pos"] = npos
+            x = x + out
+            if kind == "moe":
+                out, _ = M.moe_block(p["moe"], x, cfg)
+                x = x + out
+            else:
+                x = x + mlp_block(p["mlp"], x, cfg)
+            i_attn += 1
+        elif kind == "mamba":
+            out, nc, ns = S.ssm_decode_block(
+                p["mixer"], x, ssm["conv"][i_ssm], ssm["ssm"][i_ssm], cfg)
+            ssm["conv"] = ssm["conv"].at[i_ssm].set(nc)
+            ssm["ssm"] = ssm["ssm"].at[i_ssm].set(ns)
+            x = x + out
+            i_ssm += 1
+        elif kind == "rglru":
+            out, nc, nh = R.rglru_decode_block(
+                p["mixer"], x, rec["conv"][i_rec], rec["h"][i_rec], cfg)
+            rec["conv"] = rec["conv"].at[i_rec].set(nc)
+            rec["h"] = rec["h"].at[i_rec].set(nh)
+            x = x + out
+            x = x + mlp_block(p["mlp"], x, cfg)
+            i_rec += 1
+
+    x = C.rms_norm(x, params["stack"]["final_norm"])
+    logits = logits_from_hidden(params, x, cfg)
+    if kv is not None:
+        new_cache["kv"] = {**cache["kv"], **kv}
+    if ssm is not None:
+        new_cache["ssm"] = ssm
+    if rec is not None:
+        new_cache["rec"] = rec
+    new_cache["len"] = clen + 1
+    return logits, new_cache

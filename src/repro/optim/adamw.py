@@ -1,0 +1,93 @@
+"""AdamW with dtype-policied moments, global-norm clipping and cosine LR.
+
+Moments live in ``cfg.opt_dtype`` (fp32 default; bf16 for the 340B config —
+halving optimizer HBM).  Pure-functional: ``init`` / ``step`` over pytrees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: Any = jnp.float32
+
+
+def init(params, cfg: AdamWConfig):
+    def zero(p):
+        return jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "mu": jax.tree.map(zero, params),
+        "nu": jax.tree.map(zero, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_state(param_specs_tree, cfg: AdamWConfig):
+    """ShapeDtypeStruct optimizer state for the dry-run."""
+    from repro.models import common as C
+
+    def zero(s):
+        return jax.ShapeDtypeStruct(s.shape, cfg.moment_dtype)
+    specs = jax.tree.map(zero, param_specs_tree, is_leaf=C.is_spec_leaf)
+    return {"mu": specs, "nu": specs,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def step(params, grads, state, cfg: AdamWConfig):
+    """One AdamW update. Returns (new_params, new_state, metrics)."""
+    count = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = _schedule(count, cfg)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu_n = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu_n = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mu_hat = mu_n / (1 - cfg.b1 ** count.astype(jnp.float32))
+        nu_hat = nu_n / (1 - cfg.b2 ** count.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return (new_p.astype(p.dtype), mu_n.astype(cfg.moment_dtype),
+                nu_n.astype(cfg.moment_dtype))
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": count}, {
+        "grad_norm": gnorm, "lr": lr}

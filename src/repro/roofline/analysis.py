@@ -1,0 +1,205 @@
+"""Three-term roofline analysis from the compiled dry-run (deliverable g).
+
+Terms (per chip, TPU v5e):
+
+    compute    = HLO_FLOPs_dev / peak_FLOPs        (197 TFLOP/s bf16)
+    memory     = HLO_bytes_dev / HBM_bw            (819 GB/s)
+    collective = collective_bytes_dev / link_bw    (~50 GB/s/link ICI)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes; the partitioned HLO
+text for collective operand bytes (all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute).
+
+XLA's cost analysis counts a while-loop (scan) body ONCE, not x trip count,
+so per-cell totals are obtained by **layer-marginal extrapolation**: lower
+shallow UNROLLED variants with 1 and 2 layer-periods, then
+
+    total = A + (n_periods_equiv - 1) * (B - A)
+
+which is exact for depth-linear programs (transformer stacks are).  The
+embed/logits/optimizer components live in A and the per-period marginal in
+(B - A); encoder-decoder scales encoder and decoder together.
+
+MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference), with N_active for MoE;
+the ratio MODEL_FLOPS / HLO_FLOPs flags remat/redundancy waste (>1 means
+HLO does extra work: remat recompute, attention's quadratic term, padding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+import numpy as np
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # B/s
+LINK_BW = 50e9           # B/s per ICI link
+CHIPS_SINGLE_POD = 256
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+                "u16": 2}
+
+_COLL_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^=]*?\b"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b")
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, float]:
+    """Sum result-shape bytes of every collective op in (partitioned) HLO."""
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.groups()
+        if kind.endswith("-start"):
+            kind = kind[:-6]
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        if dims:
+            nbytes *= int(np.prod([int(d) for d in dims.split(",") if d]))
+        out[kind] = out.get(kind, 0.0) + float(nbytes)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def _period_len(cfg) -> int:
+    return len(cfg.block_pattern) if cfg.block_pattern else 1
+
+
+def _shallow_cfg(cfg, periods: int, cfg_patch: dict | None = None):
+    per = _period_len(cfg)
+    kw = dict(num_layers=per * periods, scan_layers=False)
+    if cfg.encoder_layers > 0:
+        kw["encoder_layers"] = periods
+    if cfg_patch:
+        kw.update(cfg_patch)
+    return dataclasses.replace(cfg, **kw)
+
+
+def shallow_costs(arch: str, shape_name: str, periods: int,
+                  multi_pod: bool = False, cfg_patch: dict | None = None,
+                  rules_override: dict | None = None) -> dict:
+    """Lower+compile an unrolled `periods`-deep variant; return per-device
+    flops/bytes/collective-bytes.  ``cfg_patch``/``rules_override`` apply
+    §Perf hillclimb candidates."""
+    from repro.configs import get_config
+    from repro.launch.dryrun import lower_cell
+
+    cfg = get_config(arch)
+    cfg2 = _shallow_cfg(cfg, periods, cfg_patch)
+    res, lowered, compiled = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                        cfg_override=cfg2,
+                                        rules_override=rules_override)
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {"flops": res["flops"], "bytes": res["bytes_accessed"],
+            "coll": coll["total"], "coll_by_kind": coll}
+
+
+def n_periods_equiv(cfg) -> float:
+    return cfg.num_layers / _period_len(cfg)
+
+
+def active_param_count(cfg) -> int:
+    """Parameter count with only top-k routed experts active (MoE)."""
+    from repro.models.model import Model
+    n = Model(cfg).param_count()
+    if cfg.moe is not None:
+        per_expert = 3 * cfg.d_model * cfg.moe.d_expert
+        inactive = (cfg.moe.num_routed_padded - cfg.moe.top_k)
+        n -= cfg.num_layers * inactive * per_expert
+    return int(n)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for the cell (6ND train / 2ND inference)."""
+    n_act = active_param_count(cfg)
+    if shape.mode == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_act * tokens
+    if shape.mode == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_act * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n_act * tokens
+
+
+def analyze_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                 chips: int = CHIPS_SINGLE_POD, cfg_patch: dict | None = None,
+                 rules_override: dict | None = None) -> dict:
+    """Full three-term roofline for one cell via marginal extrapolation."""
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    a = shallow_costs(arch, shape_name, 1, multi_pod, cfg_patch, rules_override)
+    b = shallow_costs(arch, shape_name, 2, multi_pod, cfg_patch, rules_override)
+    k = n_periods_equiv(cfg)
+
+    def extrap(key):
+        return a[key] + (k - 1.0) * max(b[key] - a[key], 0.0)
+
+    flops_dev = extrap("flops")
+    bytes_dev = extrap("bytes")
+    coll_dev = extrap("coll")
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(cfg, shape)
+    hlo_global = flops_dev * chips
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "flops_dev": flops_dev, "bytes_dev": bytes_dev, "coll_dev": coll_dev,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / max(hlo_global, 1.0),
+        # roofline fraction: how much of the bound step is useful compute
+        "roofline_fraction": (mf / chips / PEAK_FLOPS) / max(bound, 1e-30),
+        "coll_by_kind_A": a["coll_by_kind"],
+    }
+
+
+def main():
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    import argparse
+
+    from repro.configs import ARCHS, get_config, shapes_for
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/roofline.json")
+    args = ap.parse_args()
+
+    cells = ([(args.arch.replace("-", "_").replace(".", "_"), args.shape)]
+             if not args.all else
+             [(a, s) for a in ARCHS for s in shapes_for(get_config(a))])
+    rows = []
+    for arch, shape in cells:
+        try:
+            r = analyze_cell(arch, shape)
+            rows.append(r)
+            print(f"{arch:24s} {shape:12s} comp={r['t_compute_s']*1e3:8.2f}ms "
+                  f"mem={r['t_memory_s']*1e3:8.2f}ms coll={r['t_collective_s']*1e3:8.2f}ms "
+                  f"dom={r['dominant']:10s} useful={r['useful_ratio']:.2f} "
+                  f"roofline={r['roofline_fraction']:.2%}")
+        except Exception as e:  # noqa: BLE001
+            print(f"FAIL {arch} {shape}: {e}")
+            import traceback; traceback.print_exc()
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

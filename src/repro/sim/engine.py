@@ -1,0 +1,92 @@
+"""Top-level simulation driver: run every mechanism over a workload trace.
+
+This is the gem5-replacement entry point used by the benchmarks:
+
+    tt = prepare(make_trace("pagerank", "arxiv", threads=16))
+    results = run_all(tt, HWParams())           # mech -> SimResult
+    table = summarize(results, HWParams())      # normalized to CPU-only
+"""
+
+from __future__ import annotations
+
+from repro.core.coherence import LazyPIMConfig, simulate_lazypim
+from repro.core.mechanisms import (
+    SimResult,
+    simulate_cg,
+    simulate_cpu_only,
+    simulate_fg,
+    simulate_ideal,
+    simulate_nc,
+)
+from repro.core.signatures import SignatureSpec
+from repro.sim.costmodel import HWParams
+from repro.sim.prep import TraceTensors, prepare
+from repro.sim.trace import WindowTrace, make_trace
+
+MECHANISMS = ("cpu", "fg", "cg", "nc", "lazypim", "ideal")
+
+_SIMULATORS = {
+    "cpu": simulate_cpu_only,
+    "ideal": simulate_ideal,
+    "fg": simulate_fg,
+    "cg": simulate_cg,
+    "nc": simulate_nc,
+}
+
+
+def run_mechanism(
+    tt: TraceTensors,
+    hw: HWParams,
+    mechanism: str,
+    lazy_cfg: LazyPIMConfig | None = None,
+) -> SimResult:
+    if mechanism == "lazypim":
+        return simulate_lazypim(tt, hw, lazy_cfg)
+    return _SIMULATORS[mechanism](tt, hw)
+
+
+def run_all(
+    tt: TraceTensors,
+    hw: HWParams | None = None,
+    mechanisms: tuple[str, ...] = MECHANISMS,
+    lazy_cfg: LazyPIMConfig | None = None,
+) -> dict[str, SimResult]:
+    hw = hw or HWParams()
+    return {m: run_mechanism(tt, hw, m, lazy_cfg) for m in mechanisms}
+
+
+def summarize(results: dict[str, SimResult], hw: HWParams) -> dict[str, dict]:
+    """Normalize every mechanism to CPU-only (the paper's presentation)."""
+    base = results["cpu"]
+    base_e = base.energy_pj(hw)["total"]
+    out = {}
+    for m, r in results.items():
+        out[m] = dict(
+            speedup=base.time_ns / r.time_ns,
+            traffic=r.offchip_bytes / base.offchip_bytes,
+            energy=r.energy_pj(hw)["total"] / base_e,
+            time_ns=r.time_ns,
+            offchip_bytes=r.offchip_bytes,
+            energy_pj=r.energy_pj(hw)["total"],
+            conflict_rate=r.conflict_rate,
+            conflict_rate_exact=r.conflict_rate_exact,
+            flush_lines=r.flush_lines,
+            blocked_accesses=r.blocked_accesses,
+        )
+    return out
+
+
+def run_workload(
+    app: str,
+    graph_name: str | None = None,
+    threads: int = 16,
+    hw: HWParams | None = None,
+    spec: SignatureSpec | None = None,
+    mechanisms: tuple[str, ...] = MECHANISMS,
+    lazy_cfg: LazyPIMConfig | None = None,
+    **trace_kw,
+) -> dict[str, SimResult]:
+    """Convenience: trace -> prepare -> run_all."""
+    trace = make_trace(app, graph_name, threads=threads, **trace_kw)
+    tt = prepare(trace, spec)
+    return run_all(tt, hw or HWParams(), mechanisms, lazy_cfg)

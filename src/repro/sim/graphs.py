@@ -1,0 +1,165 @@
+"""Synthetic input datasets shaped like the paper's (§6.1).
+
+The paper uses three SNAP graphs and an in-house HTAP IMDB.  We have no
+network access, so we regenerate inputs with *matched* node/edge counts and a
+power-law degree distribution (all three SNAP graphs are heavy-tailed), and an
+IMDB with the paper's exact table geometry (64 tables x 64 K tuples x 32
+fields, uniform random integers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+
+# Paper §6.1 dataset shapes.
+GRAPH_SHAPES = {
+    "enron": dict(nodes=73384, edges=367662),
+    "arxiv": dict(nodes=10484, edges=28984),
+    "gnutella": dict(nodes=45374, edges=109410),
+}
+
+IMDB_SHAPE = dict(tables=64, tuples_per_table=65536, fields_per_tuple=32)
+
+# Bytes per element of the Ligra-style vertex/edge arrays.
+VERTEX_VALUE_BYTES = 8  # double p_curr / p_next
+EDGE_BYTES = 8          # (dst id + weight packed), Ligra CSR payload
+TUPLE_FIELD_BYTES = 8   # uniformly-distributed integers (§6.1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    name: str
+    num_nodes: int
+    edges: np.ndarray  # (E, 2) int32 (src, dst)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.edges.shape[0])
+
+
+def make_graph(name: str, seed: int = 0, scale: float = 1.0) -> Graph:
+    """Power-law graph with the paper dataset's node/edge counts.
+
+    ``scale`` < 1 shrinks the graph proportionally (used by fast tests).
+    """
+    shape = GRAPH_SHAPES[name]
+    n = max(16, int(shape["nodes"] * scale))
+    e = max(32, int(shape["edges"] * scale))
+    rng = np.random.default_rng(seed ^ zlib.crc32(name.encode()) & 0xFFFF)
+    # Zipf-ish endpoint sampling: heavy-tailed in-degree like the SNAP inputs.
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    probs = ranks ** -0.9
+    probs /= probs.sum()
+    dst = rng.choice(n, size=e, p=probs).astype(np.int32)
+    src = rng.integers(0, n, size=e).astype(np.int32)
+    # permute vertex ids so hot vertices are scattered in the address space
+    perm = rng.permutation(n).astype(np.int32)
+    edges = np.stack([perm[src], perm[dst]], axis=1)
+    # sort by source: Ligra CSR edge arrays are laid out contiguously per src
+    edges = edges[np.argsort(edges[:, 0], kind="stable")]
+    return Graph(name=name, num_nodes=n, edges=edges)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphLayout:
+    """Cache-line layout of the PIM data region for a graph app.
+
+    Region order (line granularity): [p_curr | p_next | frontier | edges].
+    Matches Listing 1: ``@PIM double* p_curr, p_next; @PIM bool* frontier``
+    plus the shared CSR edge array of the ``@PIM Graph``.
+    """
+
+    num_nodes: int
+    num_edges: int
+    vertex_lines: int
+    frontier_lines: int
+    edge_lines: int
+
+    @property
+    def p_curr_base(self) -> int:
+        return 0
+
+    @property
+    def p_next_base(self) -> int:
+        return self.vertex_lines
+
+    @property
+    def frontier_base(self) -> int:
+        return 2 * self.vertex_lines
+
+    @property
+    def edge_base(self) -> int:
+        return 2 * self.vertex_lines + self.frontier_lines
+
+    @property
+    def total_lines(self) -> int:
+        return self.edge_base + self.edge_lines
+
+    def vertex_line(self, base: int, vertex_ids: np.ndarray) -> np.ndarray:
+        per_line = 64 // VERTEX_VALUE_BYTES
+        return base + vertex_ids // per_line
+
+    def frontier_line(self, vertex_ids: np.ndarray) -> np.ndarray:
+        return self.frontier_base + vertex_ids // 64  # 1 B per flag
+
+    def edge_line(self, edge_ids: np.ndarray) -> np.ndarray:
+        per_line = 64 // EDGE_BYTES
+        return self.edge_base + edge_ids // per_line
+
+
+def layout_for_graph(g: Graph) -> GraphLayout:
+    per_line_v = 64 // VERTEX_VALUE_BYTES
+    per_line_e = 64 // EDGE_BYTES
+    return GraphLayout(
+        num_nodes=g.num_nodes,
+        num_edges=g.num_edges,
+        vertex_lines=-(-g.num_nodes // per_line_v),
+        frontier_lines=-(-g.num_nodes // 64),
+        edge_lines=-(-g.num_edges // per_line_e),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class IMDBLayout:
+    """Line layout of the in-memory database region (§6.1): 64 tables of 64 K
+    tuples x 32 8-byte fields; plus a hash-join scratch area."""
+
+    tables: int
+    tuples_per_table: int
+    fields_per_tuple: int
+    scale: float = 1.0
+
+    @property
+    def tuple_lines(self) -> int:
+        return (self.fields_per_tuple * TUPLE_FIELD_BYTES) // 64  # 4 lines
+
+    @property
+    def table_lines(self) -> int:
+        return int(self.tuples_per_table * self.scale) * self.tuple_lines
+
+    @property
+    def hash_area_lines(self) -> int:
+        return max(64, self.table_lines // 4)
+
+    @property
+    def total_lines(self) -> int:
+        return self.tables * self.table_lines + self.hash_area_lines
+
+    def tuple_line(self, table: np.ndarray, tup: np.ndarray, field_line: np.ndarray):
+        return table * self.table_lines + tup * self.tuple_lines + field_line
+
+    @property
+    def hash_base(self) -> int:
+        return self.tables * self.table_lines
+
+
+def make_imdb_layout(scale: float = 1.0) -> IMDBLayout:
+    return IMDBLayout(
+        tables=IMDB_SHAPE["tables"],
+        tuples_per_table=IMDB_SHAPE["tuples_per_table"],
+        fields_per_tuple=IMDB_SHAPE["fields_per_tuple"],
+        scale=scale,
+    )

@@ -1,0 +1,317 @@
+"""Trace → device tensors + shared bitmap/signature helpers for the simulator.
+
+The coherence engine (``repro.core.mechanisms`` / ``repro.core.coherence``)
+runs a ``lax.scan`` over partial-kernel windows.  This module prepares the
+static per-trace tensors (padded access lists, per-line H3 hash positions,
+pre-write bitmaps, unique-line counts) and the pure-jnp primitives every
+mechanism shares:
+
+* ``sig_bits_from_ids``     — build a (sig_bits,) Bloom image from an address list
+* ``bank_bits_from_bitmap`` — build the CPUWriteSet register bank from a dirty
+                              line bitmap (round-robin register assignment)
+* ``conflict_any``          — the paper's AND-intersection conflict prefilter
+* ``members``               — signature membership per line (with real FPs)
+* ``cpu_cache_step``        — CPU-side presence/dirty bitmap evolution
+* ``evict_to_cap``          — capacity eviction with deterministic thinning
+
+Everything is bit-exact with :mod:`repro.core.signatures` (same H3 matrices);
+the simulator's false positives are *actual* hash collisions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.signatures import SignatureSpec, hash_positions
+from repro.sim.costmodel import HWParams, LINE_BYTES
+from repro.sim.trace import WindowTrace
+
+CPUWS_REGS = 16  # CPUWriteSet bank registers (paper §5.7)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    meta_fields=("name", "threads", "num_lines", "num_windows", "num_kernels",
+                 "spec", "cpu_priv_miss_rate", "cpu_reuse"),
+    data_fields=("line_pos", "line_reg", "pim_reads", "pim_writes", "cpu_reads",
+                 "cpu_writes", "pim_r_valid", "pim_w_valid", "cpu_r_valid",
+                 "cpu_w_valid", "kernel_id", "kernel_start", "kernel_end",
+                 "pre_writes", "pim_instr", "cpu_instr", "cpu_priv",
+                 "pim_uniq_r", "pim_uniq_w", "pim_uniq"),
+)
+@dataclasses.dataclass(frozen=True)
+class TraceTensors:
+    """Device-resident, fixed-shape view of one WindowTrace (a jit pytree:
+    tensors are leaves, geometry/spec are static metadata)."""
+
+    name: str
+    threads: int
+    num_lines: int
+    num_windows: int
+    num_kernels: int
+    spec: SignatureSpec
+
+    # Per-line static tables
+    line_pos: jax.Array      # (num_lines, M) int32 global signature bit positions
+    line_reg: jax.Array      # (num_lines,) int32 CPUWriteSet register id
+
+    # Access lists (−1 = empty slot) + validity masks
+    pim_reads: jax.Array     # (W, AR) int32
+    pim_writes: jax.Array    # (W, AW) int32
+    cpu_reads: jax.Array     # (W, BR) int32
+    cpu_writes: jax.Array    # (W, BW) int32
+    pim_r_valid: jax.Array   # (W, AR) bool
+    pim_w_valid: jax.Array   # (W, AW) bool
+    cpu_r_valid: jax.Array   # (W, BR) bool
+    cpu_w_valid: jax.Array   # (W, BW) bool
+
+    # Kernel structure
+    kernel_id: jax.Array     # (W,) int32
+    kernel_start: jax.Array  # (W,) bool
+    kernel_end: jax.Array    # (W,) bool
+    pre_writes: jax.Array    # (K, num_lines) bool
+
+    # Work counts
+    pim_instr: jax.Array     # (W,) f32
+    cpu_instr: jax.Array     # (W,) f32
+    cpu_priv: jax.Array      # (W,) f32
+    cpu_priv_miss_rate: float
+    cpu_reuse: float
+
+    # Unique-line counts per window (locality model inputs)
+    pim_uniq_r: jax.Array    # (W,) f32
+    pim_uniq_w: jax.Array    # (W,) f32
+    pim_uniq: jax.Array      # (W,) f32 (reads ∪ writes)
+
+    @property
+    def sig_bits(self) -> int:
+        return self.spec.sig_bits
+
+    @property
+    def num_segments(self) -> int:
+        return self.spec.num_segments
+
+
+def _uniq_count(rows: np.ndarray) -> np.ndarray:
+    out = np.empty((rows.shape[0],), dtype=np.float32)
+    for i, row in enumerate(rows):
+        v = row[row >= 0]
+        out[i] = len(np.unique(v))
+    return out
+
+
+def _uniq_union_count(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    out = np.empty((a.shape[0],), dtype=np.float32)
+    for i in range(a.shape[0]):
+        va = a[i][a[i] >= 0]
+        vb = b[i][b[i] >= 0]
+        out[i] = len(np.unique(np.concatenate([va, vb])))
+    return out
+
+
+def prepare(trace: WindowTrace, spec: SignatureSpec | None = None) -> TraceTensors:
+    """Stage a WindowTrace onto device with precomputed hash tables."""
+    spec = spec or SignatureSpec()
+    n = trace.num_lines
+    # H3 hash positions for every line in the PIM data region (one-time).
+    line_ids = jnp.arange(n, dtype=jnp.uint32)
+    line_pos = hash_positions(spec, line_ids).astype(jnp.int32)  # (n, M)
+    line_reg = (jnp.arange(n, dtype=jnp.int32)) % CPUWS_REGS
+
+    def dev(x, dt=jnp.int32):
+        return jnp.asarray(x, dtype=dt)
+
+    return TraceTensors(
+        name=trace.name,
+        threads=trace.threads,
+        num_lines=n,
+        num_windows=trace.num_windows,
+        num_kernels=trace.num_kernels,
+        spec=spec,
+        line_pos=line_pos,
+        line_reg=line_reg,
+        pim_reads=dev(trace.pim_reads),
+        pim_writes=dev(trace.pim_writes),
+        cpu_reads=dev(trace.cpu_reads),
+        cpu_writes=dev(trace.cpu_writes),
+        pim_r_valid=dev(trace.pim_reads >= 0, jnp.bool_),
+        pim_w_valid=dev(trace.pim_writes >= 0, jnp.bool_),
+        cpu_r_valid=dev(trace.cpu_reads >= 0, jnp.bool_),
+        cpu_w_valid=dev(trace.cpu_writes >= 0, jnp.bool_),
+        kernel_id=dev(trace.kernel_id),
+        kernel_start=dev(trace.kernel_start, jnp.bool_),
+        kernel_end=dev(trace.kernel_end, jnp.bool_),
+        pre_writes=dev(trace.pre_writes, jnp.bool_),
+        pim_instr=dev(trace.pim_instr, jnp.float32),
+        cpu_instr=dev(trace.cpu_instr, jnp.float32),
+        cpu_priv=dev(trace.cpu_priv_accesses, jnp.float32),
+        cpu_priv_miss_rate=float(trace.cpu_priv_miss_rate),
+        cpu_reuse=float(trace.cpu_reuse),
+        pim_uniq_r=dev(_uniq_count(trace.pim_reads), jnp.float32),
+        pim_uniq_w=dev(_uniq_count(trace.pim_writes), jnp.float32),
+        pim_uniq=dev(_uniq_union_count(trace.pim_reads, trace.pim_writes), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Signature primitives over line-id tensors (bit-exact with core.signatures)
+# ---------------------------------------------------------------------------
+
+
+def sig_bits_from_ids(
+    tt: TraceTensors, ids: jax.Array, valid: jax.Array
+) -> jax.Array:
+    """Bloom image (sig_bits,) bool of the valid line ids in ``ids`` (A,)."""
+    pos = tt.line_pos[jnp.clip(ids, 0, tt.num_lines - 1)]  # (A, M)
+    pos = jnp.where(valid[:, None], pos, tt.sig_bits)
+    staged = jnp.zeros((tt.sig_bits + 1,), dtype=bool)
+    staged = staged.at[pos.reshape(-1)].set(True, mode="drop")
+    return staged[: tt.sig_bits]
+
+
+def sig_bits_from_bitmap(tt: TraceTensors, bitmap: jax.Array) -> jax.Array:
+    """Bloom image (sig_bits,) bool of all lines set in ``bitmap`` (n,) bool."""
+    pos = jnp.where(bitmap[:, None], tt.line_pos, tt.sig_bits)  # (n, M)
+    staged = jnp.zeros((tt.sig_bits + 1,), dtype=bool)
+    staged = staged.at[pos.reshape(-1)].set(True, mode="drop")
+    return staged[: tt.sig_bits]
+
+
+def bank_bits_from_bitmap(
+    tt: TraceTensors, bitmap: jax.Array, num_regs: int = CPUWS_REGS
+) -> jax.Array:
+    """CPUWriteSet bank (num_regs, sig_bits) bool from a dirty-line bitmap.
+
+    Register assignment is line_id % num_regs — the deterministic equivalent
+    of the paper's round-robin pointer for set-valued (unordered) insertion.
+    """
+    stride = tt.sig_bits + 1
+    pos = jnp.where(bitmap[:, None], tt.line_pos, tt.sig_bits)  # (n, M)
+    flat = tt.line_reg[:, None] * stride + pos  # (n, M)
+    staged = jnp.zeros((num_regs * stride,), dtype=bool)
+    staged = staged.at[flat.reshape(-1)].set(True, mode="drop")
+    return staged.reshape(num_regs, stride)[:, : tt.sig_bits]
+
+
+def conflict_any(tt: TraceTensors, read_bits: jax.Array, bank_bits: jax.Array) -> jax.Array:
+    """Paper §5.3/§5.5 conflict prefilter: True iff the PIMReadSet intersects
+    ANY CPUWriteSet register with every segment non-empty."""
+    inter = bank_bits & read_bits[None, :]  # (R, sig_bits)
+    seg = inter.reshape(bank_bits.shape[0], tt.num_segments, -1)
+    return jnp.any(jnp.all(jnp.any(seg, axis=2), axis=1))
+
+
+def members(tt: TraceTensors, bitmap: jax.Array, bits: jax.Array) -> jax.Array:
+    """Per-line signature membership (n,) bool for lines set in ``bitmap``.
+    Includes the signature's real false positives."""
+    looked = bits[tt.line_pos]  # (n, M)
+    return bitmap & jnp.all(looked, axis=1)
+
+
+def ids_member(
+    tt: TraceTensors, ids: jax.Array, valid: jax.Array, bits: jax.Array
+) -> jax.Array:
+    """Signature membership for an address list (A,) -> (A,) bool."""
+    pos = tt.line_pos[jnp.clip(ids, 0, tt.num_lines - 1)]
+    return valid & jnp.all(bits[pos], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# CPU cache bitmap evolution
+# ---------------------------------------------------------------------------
+
+
+def scatter_set(bitmap: jax.Array, ids: jax.Array, valid: jax.Array) -> jax.Array:
+    idx = jnp.where(valid, ids, bitmap.shape[0])
+    big = jnp.concatenate([bitmap, jnp.zeros((1,), bitmap.dtype)])
+    big = big.at[idx].set(True, mode="drop")
+    return big[:-1]
+
+
+def gather_hits(bitmap: jax.Array, ids: jax.Array, valid: jax.Array) -> jax.Array:
+    """Per-slot hit flags: valid & line present."""
+    present = bitmap[jnp.clip(ids, 0, bitmap.shape[0] - 1)]
+    return valid & present
+
+
+def evict_to_cap(
+    present: jax.Array,
+    dirty: jax.Array,
+    window_idx: jax.Array,
+    cap: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Capacity model: thin the presence bitmap down to ~cap lines using a
+    deterministic per-(line, window) hash.  Evicted dirty lines are written
+    back (returned as a count).  No-op when under cap."""
+    n = present.shape[0]
+    count = jnp.sum(present)
+    over = count > cap
+    keep_prob = jnp.clip(cap / jnp.maximum(count, 1), 0.0, 1.0)
+    h = (jnp.arange(n, dtype=jnp.uint32) * np.uint32(2654435761)
+         + window_idx.astype(jnp.uint32) * np.uint32(40503))
+    u = ((h >> np.uint32(16)) & np.uint32(0xFFFF)).astype(jnp.float32) / 65536.0
+    drop = present & (u > keep_prob) & over
+    wb_lines = jnp.sum(dirty & drop).astype(jnp.float32)
+    return present & ~drop, dirty & ~drop, wb_lines
+
+
+@dataclasses.dataclass
+class CpuStepOut:
+    present: jax.Array
+    dirty: jax.Array
+    hits: jax.Array        # scalar f32
+    misses: jax.Array      # scalar f32
+    wb_lines: jax.Array    # capacity writebacks, f32
+    mem_ns: jax.Array      # CPU-side memory latency for this window
+    fill_bytes: jax.Array  # off-chip fill traffic (miss fills)
+
+
+def cpu_cache_step(
+    tt: TraceTensors,
+    hw: HWParams,
+    present: jax.Array,
+    dirty: jax.Array,
+    w: jax.Array,
+    *,
+    cacheable: bool = True,
+    cap_lines: int | None = None,
+) -> CpuStepOut:
+    """One window of CPU-thread accesses to the PIM data region.
+
+    ``cacheable=False`` models NC: every access is an off-chip DRAM access,
+    and the presence/dirty bitmaps stay empty.
+    """
+    cr, crv = tt.cpu_reads[w], tt.cpu_r_valid[w]
+    cw, cwv = tt.cpu_writes[w], tt.cpu_w_valid[w]
+    n_acc = (jnp.sum(crv) + jnp.sum(cwv)).astype(jnp.float32)
+    reuse = tt.cpu_reuse
+    miss_ns = hw.offchip_mem_ns / hw.cpu_mlp  # OoO overlaps misses
+
+    if not cacheable:
+        # NC: every dynamic access (first touch AND repeats) goes to DRAM.
+        n_dyn = n_acc * reuse
+        mem_ns = n_dyn * miss_ns / hw.cpu_cores
+        fill = n_dyn * hw.nc_bytes
+        zero = jnp.zeros((), jnp.float32)
+        return CpuStepOut(present, dirty, zero, n_dyn, zero, mem_ns, fill)
+
+    r_hit = gather_hits(present, cr, crv)
+    w_hit = gather_hits(present, cw, cwv)
+    misses = (jnp.sum(crv & ~r_hit) + jnp.sum(cwv & ~w_hit)).astype(jnp.float32)
+    hits = (jnp.sum(r_hit) + jnp.sum(w_hit)).astype(jnp.float32)
+    present = scatter_set(present, cr, crv)
+    present = scatter_set(present, cw, cwv)
+    dirty = scatter_set(dirty, cw, cwv)
+    cap = cap_lines if cap_lines is not None else hw.thread_cache_cap
+    present, dirty, wb = evict_to_cap(present, dirty, w, cap)
+    # first touches: L2 hit or off-chip miss; repeats: L1 hits.
+    repeats_ns = n_acc * (reuse - 1.0) * hw.l1_hit_ns
+    mem_ns = (hits * hw.l2_hit_ns + misses * miss_ns + repeats_ns) / hw.cpu_cores
+    fill = (misses + wb) * LINE_BYTES
+    return CpuStepOut(present, dirty, hits, misses, wb, mem_ns, fill)

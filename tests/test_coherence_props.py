@@ -1,0 +1,99 @@
+"""Property-based tests (hypothesis) on the coherence protocol's invariants."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import signatures as sig
+from repro.core.coherence import LazyPIMConfig, simulate_lazypim
+from repro.core.mechanisms import simulate_ideal
+from repro.sim.costmodel import HWParams
+from repro.sim.prep import (bank_bits_from_bitmap, conflict_any, members,
+                            prepare, sig_bits_from_ids)
+from repro.sim.trace import make_graph_trace, make_htap_trace
+
+HW = HWParams()
+SPEC = sig.SignatureSpec()
+
+
+# ---------------------------------------------------------------------------
+# Signature-level invariants (the protocol's soundness rests on these)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=64),
+       st.integers(0, 2**31 - 1))
+def test_no_false_negatives_membership(addrs, probe):
+    s = sig.insert(SPEC, sig.empty_signature(SPEC),
+                   jnp.asarray(addrs, jnp.uint32))
+    assert bool(jnp.all(sig.query(SPEC, s, jnp.asarray(addrs, jnp.uint32))))
+    if probe in addrs:
+        assert bool(sig.query(SPEC, s, jnp.asarray([probe], jnp.uint32))[0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2**20), min_size=1, max_size=100),
+       st.lists(st.integers(0, 2**20), min_size=1, max_size=100))
+def test_intersection_prefilter_sound(a, b):
+    """If the sets share an address, the AND-prefilter MUST fire (paper
+    §5.3: false positives allowed, false negatives never)."""
+    sa = sig.insert(SPEC, sig.empty_signature(SPEC), jnp.asarray(a, jnp.uint32))
+    sb = sig.insert(SPEC, sig.empty_signature(SPEC), jnp.asarray(b, jnp.uint32))
+    if set(a) & set(b):
+        assert bool(sig.intersect_nonempty(SPEC, sa, sb))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_conflict_detection_no_false_negatives_trace_level(seed):
+    """Exact RAW conflict (ground truth) implies signature-detected conflict
+    on the same window — across the full bank machinery."""
+    rng = np.random.default_rng(seed)
+    n_lines = 5000
+    tr = make_graph_trace("components", "arxiv", threads=16, num_kernels=2,
+                          windows_per_kernel=3, seed=seed % 7, scale=0.3)
+    tt = prepare(tr)
+    w = int(rng.integers(0, tt.num_windows))
+    # ground truth on this window
+    reads = np.asarray(tt.pim_reads[w])
+    rv = np.asarray(tt.pim_r_valid[w])
+    cw = np.asarray(tt.cpu_writes[w])
+    cv = np.asarray(tt.cpu_w_valid[w])
+    shared = set(reads[rv]) & set(cw[cv])
+    bm = np.zeros((tt.num_lines,), bool)
+    bm[cw[cv]] = True
+    bank = bank_bits_from_bitmap(tt, jnp.asarray(bm))
+    rbits = sig_bits_from_ids(tt, tt.pim_reads[w], tt.pim_r_valid[w])
+    if shared:
+        assert bool(conflict_any(tt, rbits, bank))
+
+
+def test_lazypim_never_slower_than_serialized_bound():
+    """Sanity: LazyPIM exec time >= Ideal's (speculation can't beat the
+    no-coherence upper bound)."""
+    for app, g in (("pagerank", "arxiv"), ("htap128", None)):
+        tr = (make_graph_trace(app, g, threads=16) if g
+              else make_htap_trace(app, threads=16))
+        tt = prepare(tr)
+        lz = simulate_lazypim(tt, HW, LazyPIMConfig())
+        ideal = simulate_ideal(tt, HW)
+        assert lz.time_ns >= ideal.time_ns
+        assert lz.offchip_bytes >= ideal.offchip_bytes
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 5))
+def test_members_subset_of_bitmap(k):
+    """Signature membership results are always a subset of the query bitmap
+    (flushes only touch lines that exist)."""
+    tr = make_htap_trace("htap128", threads=4, num_kernels=2,
+                         windows_per_kernel=2, scale=0.005)
+    tt = prepare(tr)
+    rng = np.random.default_rng(k)
+    bm = jnp.asarray(rng.random(tt.num_lines) < 0.01)
+    bits = sig_bits_from_ids(tt, tt.pim_reads[0], tt.pim_r_valid[0])
+    m = members(tt, bm, bits)
+    assert bool(jnp.all(~m | bm))

@@ -1,0 +1,55 @@
+"""Flash-attention Pallas kernel vs pure-jnp oracle: shape/dtype sweep in
+interpret mode (deliverable c)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _mk(b, sq, sk, hq, hkv, d, dtype, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(k1, (b, sq, hq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (b, sk, hkv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (b, sk, hkv, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 128, 128, 4, 4, 64),     # MHA, single tile
+    (2, 256, 256, 4, 2, 64),     # GQA 2:1
+    (1, 384, 384, 8, 1, 32),     # MQA, non-square-tile seq
+    (1, 200, 200, 4, 2, 64),     # ragged (padding path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matches_ref_causal(shape, dtype):
+    b, sq, sk, hq, hkv, d = shape
+    q, k, v = _mk(b, sq, sk, hq, hkv, d, dtype)
+    out = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128, 256])
+def test_sliding_window(window):
+    q, k, v = _mk(1, 256, 256, 4, 2, 64, jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_noncausal():
+    q, k, v = _mk(1, 128, 256, 4, 4, 64, jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=False, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)

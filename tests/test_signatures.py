@@ -1,0 +1,204 @@
+"""Unit + property tests for the parallel Bloom-filter signatures (paper §5.3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import signatures as S
+
+SPEC = S.SignatureSpec()
+
+
+def _rand_addrs(n, seed=0, hi=2**31 - 1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, hi, size=(n,)), dtype=jnp.uint32)
+
+
+class TestGeometry:
+    def test_defaults_match_paper(self):
+        # 2 Kbit register, M = 4 segments (paper §5.3 / §5.7)
+        assert SPEC.sig_bits == 2048
+        assert SPEC.num_segments == 4
+        assert SPEC.seg_bits == 512
+        assert SPEC.num_words == 64
+
+    def test_invalid_geometry_rejected(self):
+        with pytest.raises(ValueError):
+            S.SignatureSpec(sig_bits=100, num_segments=4)
+
+    def test_h3_matrix_in_range(self):
+        q = SPEC.h3_matrix
+        assert q.shape == (4, 32)
+        assert q.min() >= 0 and q.max() < SPEC.seg_bits
+
+
+class TestHashing:
+    def test_positions_one_per_segment(self):
+        pos = np.asarray(S.hash_positions(SPEC, _rand_addrs(100)))
+        assert pos.shape == (100, 4)
+        for m in range(4):
+            assert (pos[:, m] >= m * 512).all()
+            assert (pos[:, m] < (m + 1) * 512).all()
+
+    def test_deterministic(self):
+        a = _rand_addrs(50, seed=3)
+        p1 = S.hash_positions(SPEC, a)
+        p2 = S.hash_positions(SPEC, a)
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+    def test_h3_linearity(self):
+        # H3 is xor-linear: h(a ^ b) = h(a) ^ h(b) (segment-local part).
+        a = _rand_addrs(20, seed=1)
+        b = _rand_addrs(20, seed=2)
+        seg_off = jnp.arange(4, dtype=jnp.uint32) * 512
+        ha = S.hash_positions(SPEC, a) - seg_off
+        hb = S.hash_positions(SPEC, b) - seg_off
+        hab = S.hash_positions(SPEC, a ^ b) - seg_off
+        np.testing.assert_array_equal(np.asarray(ha ^ hb), np.asarray(hab))
+
+
+class TestInsertQuery:
+    def test_no_false_negatives(self):
+        addrs = _rand_addrs(250, seed=7)
+        sig = S.insert(SPEC, S.empty_signature(SPEC), addrs)
+        assert bool(S.query(SPEC, sig, addrs).all())
+
+    def test_empty_signature_rejects_all(self):
+        sig = S.empty_signature(SPEC)
+        assert not bool(S.query(SPEC, sig, _rand_addrs(100)).any())
+
+    def test_mask_disables_insert(self):
+        addrs = _rand_addrs(64, seed=11)
+        mask = jnp.zeros((64,), dtype=bool).at[:32].set(True)
+        sig = S.insert(SPEC, S.empty_signature(SPEC), addrs, mask=mask)
+        got = S.query(SPEC, sig, addrs)
+        assert bool(got[:32].all())
+        # the masked-out half should *mostly* miss (false positives possible)
+        assert int(got[32:].sum()) < 8
+
+    def test_insert_idempotent(self):
+        addrs = _rand_addrs(100, seed=5)
+        sig1 = S.insert(SPEC, S.empty_signature(SPEC), addrs)
+        sig2 = S.insert(SPEC, sig1, addrs)
+        np.testing.assert_array_equal(np.asarray(sig1), np.asarray(sig2))
+
+    def test_fp_rate_near_theory(self):
+        # Paper §5.4: 250 addresses at 2 Kbit. Partitioned-Bloom theory
+        # predicts ~2.2% membership FP; check the measured rate is close.
+        addrs = _rand_addrs(250, seed=13)
+        probes = _rand_addrs(20000, seed=17, hi=2**31 - 1) + jnp.uint32(2**31 // 2)
+        sig = S.insert(SPEC, S.empty_signature(SPEC), addrs)
+        fp = float(S.query(SPEC, sig, probes).mean())
+        theory = S.expected_membership_fp_rate(SPEC, 250)
+        assert abs(fp - theory) < 0.02, (fp, theory)
+
+    def test_saturation_grows(self):
+        sig0 = S.empty_signature(SPEC)
+        sig1 = S.insert(SPEC, sig0, _rand_addrs(50))
+        sig2 = S.insert(SPEC, sig1, _rand_addrs(200, seed=23))
+        s0, s1, s2 = (float(S.saturation(SPEC, s)) for s in (sig0, sig1, sig2))
+        assert s0 == 0.0 and s0 < s1 < s2 <= 1.0
+
+
+class TestIntersection:
+    def test_shared_address_always_conflicts(self):
+        shared = _rand_addrs(1, seed=31)
+        a = S.insert(SPEC, S.empty_signature(SPEC), shared)
+        b = S.insert(SPEC, S.empty_signature(SPEC), shared)
+        assert bool(S.intersect_nonempty(SPEC, a, b))
+
+    def test_empty_vs_anything_never_conflicts(self):
+        a = S.empty_signature(SPEC)
+        b = S.insert(SPEC, S.empty_signature(SPEC), _rand_addrs(250))
+        assert not bool(S.intersect_nonempty(SPEC, a, b))
+
+    def test_prefilter_sound_vs_membership(self):
+        # If the AND-prefilter says "no conflict", no address of B may be a
+        # member of A's signature (paper §5.3 soundness).
+        a_addrs = _rand_addrs(40, seed=41)
+        b_addrs = _rand_addrs(40, seed=43)
+        a = S.insert(SPEC, S.empty_signature(SPEC), a_addrs)
+        b = S.insert(SPEC, S.empty_signature(SPEC), b_addrs)
+        if not bool(S.intersect_nonempty(SPEC, a, b)):
+            assert not bool(S.query(SPEC, a, b_addrs).any())
+
+
+class TestBank:
+    def test_round_robin_spreads(self):
+        bank = S.empty_bank(SPEC, 16)
+        bank, ctr = S.insert_bank_round_robin(SPEC, bank, _rand_addrs(64), 0)
+        assert int(ctr) == 64
+        per_reg = np.asarray(
+            jax.vmap(lambda r: S.popcount(r))(bank)
+        )
+        assert (per_reg > 0).all()  # every register got some of the 64
+
+    def test_bank_membership_no_false_negatives(self):
+        addrs = _rand_addrs(300, seed=51)
+        bank = S.empty_bank(SPEC, 16)
+        bank, _ = S.insert_bank_round_robin(SPEC, bank, addrs, 0)
+        member = jnp.zeros((300,), dtype=bool)
+        for r in range(16):
+            member = member | S.query(SPEC, bank[r], addrs)
+        assert bool(member.all())
+
+    def test_bank_counter_carries(self):
+        bank = S.empty_bank(SPEC, 4)
+        bank, ctr = S.insert_bank_round_robin(SPEC, bank, _rand_addrs(3), 0)
+        bank, ctr = S.insert_bank_round_robin(SPEC, bank, _rand_addrs(3), ctr)
+        assert int(ctr) == 6
+
+    def test_bank_mask_skips_counter(self):
+        bank = S.empty_bank(SPEC, 4)
+        mask = jnp.array([True, False, True])
+        _, ctr = S.insert_bank_round_robin(SPEC, bank, _rand_addrs(3), 0, mask=mask)
+        assert int(ctr) == 2
+
+
+class TestPacking:
+    @pytest.mark.parametrize("sig_bits,m", [(1024, 4), (2048, 4), (4096, 8)])
+    def test_pack_unpack_roundtrip(self, sig_bits, m):
+        spec = S.SignatureSpec(sig_bits=sig_bits, num_segments=m)
+        rng = np.random.default_rng(0)
+        bits = jnp.asarray(rng.integers(0, 2, size=(sig_bits,)).astype(bool))
+        words = S.pack_bits(spec, bits)
+        np.testing.assert_array_equal(
+            np.asarray(S.unpack_bits(spec, words)), np.asarray(bits)
+        )
+
+    def test_popcount_exact(self):
+        spec = S.SignatureSpec()
+        bits = jnp.zeros((2048,), dtype=bool).at[jnp.arange(0, 2048, 7)].set(True)
+        assert int(S.popcount(S.pack_bits(spec, bits))) == len(range(0, 2048, 7))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    addrs=st.lists(
+        st.integers(min_value=0, max_value=2**32 - 1), min_size=1, max_size=200
+    ),
+    probe=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_property_no_false_negative(addrs, probe):
+    """Hypothesis: any inserted address is always found (core invariant)."""
+    arr = jnp.asarray(np.asarray(addrs, dtype=np.uint32))
+    sig = S.insert(SPEC, S.empty_signature(SPEC), arr)
+    assert bool(S.query(SPEC, sig, arr).all())
+    if probe in addrs:
+        assert bool(S.query(SPEC, sig, jnp.asarray([probe], dtype=jnp.uint32))[0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    a=st.lists(st.integers(min_value=0, max_value=2**32 - 1), min_size=1, max_size=60),
+    b=st.lists(st.integers(min_value=0, max_value=2**32 - 1), min_size=1, max_size=60),
+)
+def test_property_prefilter_soundness(a, b):
+    """Hypothesis: overlapping address sets always trip the AND-prefilter."""
+    sa = S.insert(SPEC, S.empty_signature(SPEC), jnp.asarray(np.asarray(a, np.uint32)))
+    sb = S.insert(SPEC, S.empty_signature(SPEC), jnp.asarray(np.asarray(b, np.uint32)))
+    if set(a) & set(b):
+        assert bool(S.intersect_nonempty(SPEC, sa, sb))
