@@ -1,9 +1,12 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig7,...]
+    PYTHONPATH=src python -m benchmarks.run --bench signatures
 
 Prints each figure's CSV block plus the headline-claims summary from the
-calibration harness (benchmarks.calibrate).
+calibration harness (benchmarks.calibrate).  ``--bench`` runs a named
+microbench suite (currently ``signatures``, which also writes
+``BENCH_signatures.json`` at the repo root).
 """
 
 from __future__ import annotations
@@ -23,14 +26,33 @@ MODULES = (
     "lazy_sync_collectives",
 )
 
+BENCHES = {
+    "signatures": "bench_signatures",
+}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--bench",
+        default=None,
+        choices=sorted(BENCHES),
+        help="run a named microbench suite instead of the figure modules",
+    )
     args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else None
 
     import importlib
+
+    if args.bench:
+        name = BENCHES[args.bench]
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        importlib.import_module(f"benchmarks.{name}").main()
+        print(f"[{name}: {time.time()-t0:.0f}s]")
+        return
+
+    only = set(args.only.split(",")) if args.only else None
     for name in MODULES:
         if only and name not in only:
             continue

@@ -1,0 +1,38 @@
+"""Shared microbench timing helper: compile time vs steady state.
+
+One methodology for every benchmark module: the first call is timed
+separately (it includes jit compile), then ``samples`` timed repetitions —
+each amortized over ``inner`` back-to-back dispatches so async-dispatch
+pipelining is representative — are aggregated with ``agg``.  Use
+``agg=min`` on noisy shared boxes (achievable steady state) and
+``agg=statistics.median`` when a typical-call number is wanted.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def timed(
+    fn: Callable,
+    *args,
+    inner: int = 1,
+    samples: int = 5,
+    agg: Callable = min,
+    warmup: int = 1,
+) -> tuple[float, float]:
+    """Returns (compile_seconds, steady_state_seconds_per_call)."""
+    t0 = time.perf_counter()
+    fn(*args).block_until_ready()
+    compile_s = time.perf_counter() - t0
+    for _ in range(warmup):
+        fn(*args).block_until_ready()
+    per_call = []
+    for _ in range(samples):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            r = fn(*args)
+        r.block_until_ready()
+        per_call.append((time.perf_counter() - t0) / inner)
+    return compile_s, agg(per_call)

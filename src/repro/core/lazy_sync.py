@@ -26,16 +26,27 @@ Per step, instead of a dense (V, d) gradient all-reduce, groups exchange
 2 Kbit signatures (64 words each) and reconcile at most
 ``max_reconcile_rows`` actually-conflicting rows.  Every ``commit_interval``
 steps a full commit re-synchronizes everything and resets speculation.
+
+Hot-path notes: on the default jnp path ``sync_step`` byte-slice-hashes
+each touched row exactly *once* per step (the positions are shared between
+signature build and conflict detection), against a :class:`SignatureSpec`
+cached on the :class:`LazyEmbed` instance — the seed code re-built the spec
+(and re-derived the H3 matrix) twice per step.  With
+``LazySyncConfig.use_kernel=True`` conflict detection instead runs through
+the fused Pallas kernel ``bloom_detect_conflicts_pallas`` on packed
+signatures, which re-hashes the ids in-kernel (VMEM-local) rather than
+reading precomputed positions.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.signatures import SignatureSpec, hash_positions
+from repro.core.signatures import SignatureSpec, hash_positions, pack_bits
 from repro.models import common as C
 
 
@@ -48,6 +59,7 @@ class LazySyncConfig:
     max_reconcile_rows: int = 1024     # per-step exact-reconcile budget
     pin_streak: int = 3                # paper's lock-after-3-rollbacks rule
     embed_lr: float = 0.05
+    use_kernel: bool = False           # fused Pallas conflict-detect kernel
 
 
 def init_state(cfg: LazySyncConfig, vocab: int) -> dict:
@@ -104,40 +116,94 @@ class LazyEmbed:
             self.cfg.embed_lr * grads_table.astype(jnp.float32)
         return {**params, "table": new.astype(params["table"].dtype)}
 
-    def signatures(self, touched: jax.Array) -> jax.Array:
+    @functools.cached_property
+    def spec(self) -> SignatureSpec:
+        """Signature geometry, built once per LazyEmbed (the cached H3
+        byte-slice tables ride along; the seed code re-built this — and
+        re-derived the hash matrix — on every signatures/detect call)."""
+        return SignatureSpec(self.cfg.sig_bits, self.cfg.num_segments)
+
+    def hash_touched(self, touched: jax.Array) -> jax.Array:
+        """Byte-sliced H3 positions for all touched ids: (G*T, M) uint32.
+        Computed once per step and shared by :meth:`signatures` and
+        :meth:`detect_conflicts`."""
+        return hash_positions(self.spec, touched.reshape(-1))
+
+    def signatures(
+        self, touched: jax.Array, pos: jax.Array | None = None
+    ) -> jax.Array:
         """Per-group Bloom signatures of touched rows.
 
         touched: (G, T) int32 row ids -> (G, sig_bits) bool.  This is the
         entire per-step coherence payload: G x 256 B instead of V x d x 4 B.
+        ``pos`` optionally supplies precomputed :meth:`hash_touched` output.
         """
-        spec = SignatureSpec(self.cfg.sig_bits, self.cfg.num_segments)
+        g, t = touched.shape
+        if pos is None:
+            pos = self.hash_touched(touched)
+        pos_g = pos.reshape(g, t, -1).astype(jnp.int32)
 
-        def one(ids):
-            pos = hash_positions(spec, ids.astype(jnp.uint32))
+        def one(p):
             staged = jnp.zeros((self.cfg.sig_bits + 1,), bool)
-            return staged.at[pos.reshape(-1)].set(True, mode="drop")[:-1]
+            return staged.at[p.reshape(-1)].set(True, mode="drop")[:-1]
 
-        return jax.vmap(one)(touched)
+        return jax.vmap(one)(pos_g)
 
-    def detect_conflicts(self, touched: jax.Array, sigs: jax.Array):
+    def detect_conflicts(
+        self,
+        touched: jax.Array,
+        sigs: jax.Array,
+        pos: jax.Array | None = None,
+        force: jax.Array | None = None,
+        with_mask: bool = False,
+    ):
         """Row ids touched by >= 2 groups (with the signatures' real FPs).
 
-        Returns (row_ids (R,), valid (R,)) with R = max_reconcile_rows.
+        ``force`` (G*T,) bool marks touched entries that must be reconciled
+        regardless of signature hits — the §5.5 pin rule routes persistent
+        conflicters through here.  Returns (row_ids (R,), valid (R,)) with
+        R = max_reconcile_rows; with ``with_mask=True`` additionally returns
+        the full per-entry conflict mask (G*T,) *before* budget truncation
+        (used by ``sync_step`` for streak accounting).
         """
-        spec = SignatureSpec(self.cfg.sig_bits, self.cfg.num_segments)
         g, t = touched.shape
         flat = touched.reshape(-1)
-        pos = hash_positions(spec, flat.astype(jnp.uint32))  # (G*T, M)
-        # membership of every touched id in every group's signature
-        member = jnp.all(sigs[:, pos], axis=-1)              # (G, G*T)
-        hit_groups = jnp.sum(member, axis=0)                 # (G*T,)
-        own = jnp.ones((g, t), bool).reshape(-1)
-        conflict = own & (hit_groups >= 2)
-        # dedupe-ish: score rows, take the top budget
-        score = jnp.where(conflict, 1.0, 0.0)
-        _, idx = jax.lax.top_k(score, min(self.cfg.max_reconcile_rows, flat.shape[0]))
+        if self.cfg.use_kernel:
+            # fused kernel hashes in-kernel; ``pos`` is not needed here
+            from repro.kernels.bloom import bloom_detect_conflicts
+
+            packed = jax.vmap(lambda b: pack_bits(self.spec, b))(sigs)
+            hit_groups = bloom_detect_conflicts(
+                self.spec, packed, flat, use_pallas=True
+            )
+        else:
+            if pos is None:
+                pos = self.hash_touched(touched)
+            pos = pos.astype(jnp.int32)  # (G*T, M)
+            # membership of every touched id in every group's signature
+            member = jnp.all(sigs[:, pos], axis=-1)          # (G, G*T)
+            hit_groups = jnp.sum(member, axis=0)             # (G*T,)
+        conflict = hit_groups >= 2
+        if force is not None:
+            conflict = conflict | force.reshape(-1)
+        # Budget selection: score only the FIRST occurrence of each row, so
+        # one hot row's duplicate entries consume one top_k slot, not k.
+        # Forced (pinned) rows outrank ordinary conflicts so the
+        # must-reconcile guarantee survives budget pressure (ties inside
+        # top_k are arbitrary).
+        n = flat.shape[0]
+        vocab = self.model_cfg.vocab
+        order = jnp.arange(n, dtype=jnp.int32)
+        first = jnp.full((vocab,), n, jnp.int32).at[flat].min(order, mode="drop")
+        is_first = first[flat] == order
+        score = jnp.where(is_first & conflict, 1.0, 0.0)
+        if force is not None:
+            score = jnp.where(is_first & force.reshape(-1), 2.0, score)
+        _, idx = jax.lax.top_k(score, min(self.cfg.max_reconcile_rows, n))
         rows = flat[idx]
-        valid = conflict[idx]
+        valid = score[idx] > 0  # unique conflicting/forced rows only
+        if with_mask:
+            return rows, valid, conflict
         return rows, valid
 
     def reconcile(self, params: dict, rows: jax.Array, valid: jax.Array) -> dict:
@@ -171,14 +237,41 @@ class LazyEmbed:
         periodic commit.  Returns (params, state, metrics)."""
         cfg = self.cfg
         params = self.apply_grads(params, grads_table)
-        sigs = self.signatures(touched)
-        rows, valid = self.detect_conflicts(touched, sigs)
+        # hash every touched row exactly once; signatures() and
+        # detect_conflicts() share the positions
+        pos = self.hash_touched(touched)
+        sigs = self.signatures(touched, pos=pos)
 
-        # pin rule: rows conflicting pin_streak times in a row stay eager
+        # pin rule (paper §5.5 lock-after-3): rows whose conflict streak has
+        # reached pin_streak are forced into the reconcile set (eager sync)
+        # even when no signature conflict fires this step.
         streak = state["streak"]
-        safe = jnp.where(valid, rows, 0)
-        streak = streak.at[safe].add(jnp.where(valid, 1, 0).astype(jnp.int8))
-        pinned = streak[safe] >= cfg.pin_streak  # already included in reconcile
+        flat = touched.reshape(-1)
+        pinned_mask = streak[flat] >= cfg.pin_streak  # (G*T,)
+        rows, valid, conflict_mask = self.detect_conflicts(
+            touched, sigs, pos=pos, force=pinned_mask, with_mask=True
+        )
+
+        # streak accounting, from the FULL pre-budget conflict mask: each
+        # *unique* conflicting row extends its streak by exactly 1 (a
+        # scatter-add over entries would count duplicate touches k times —
+        # and wrap int8 at 256 — for hot rows), including rows the top_k
+        # budget could not fit this step (they keep ratcheting toward the
+        # pin, whose 2.0 priority then guarantees reconciliation).  Rows
+        # touched WITHOUT conflicting reset to 0 — the streak is a
+        # *consecutive*-conflict count (§5.5 "3 rollbacks in a row"), not a
+        # cumulative one; untouched rows keep their streak.
+        vocab = streak.shape[0]
+        mark = jnp.zeros((vocab + 1,), bool).at[
+            jnp.where(conflict_mask, flat, vocab)
+        ].set(True, mode="drop")[:vocab]
+        touched_mark = jnp.zeros((vocab + 1,), bool).at[flat].set(
+            True, mode="drop"
+        )[:vocab]
+        bumped = jnp.minimum(streak.astype(jnp.int32) + 1, 127).astype(jnp.int8)
+        streak = jnp.where(
+            mark, bumped, jnp.where(touched_mark, jnp.int8(0), streak)
+        )
 
         params = self.reconcile(params, rows, valid)
 
@@ -187,10 +280,16 @@ class LazyEmbed:
         params = jax.lax.cond(do_commit, self.commit, lambda p: p, params)
         streak = jnp.where(do_commit, jnp.zeros_like(streak), streak)
 
+        # unique pinned *rows* (summing pinned_mask would count a hot row
+        # once per duplicate touched entry)
+        pin_mark = jnp.zeros((vocab + 1,), bool).at[
+            jnp.where(pinned_mask, flat, vocab)
+        ].set(True, mode="drop")[:vocab]
+
         n_conflicts = jnp.sum(valid)
         metrics = {
             "lazy_conflict_rows": n_conflicts,
-            "lazy_pinned": jnp.sum(pinned),
+            "lazy_pinned": jnp.sum(pin_mark),
             "lazy_commit": do_commit,
             # comm accounting (bytes): signatures + reconciled rows vs dense
             "lazy_bytes": (cfg.num_groups * cfg.sig_bits // 8

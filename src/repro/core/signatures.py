@@ -13,6 +13,23 @@ JAX so the coherence simulator can ``vmap``/``scan`` over it; the Pallas TPU
 kernels in ``repro.kernels.bloom`` implement the same math for the hot batched
 paths and are validated against this module.
 
+**Byte-sliced H3 (the fast hot path).**  H3 is xor-linear over address bits:
+``h_m(a) = XOR_{j : bit j of a set} Q[m, j]``.  Folding one bit at a time
+costs ``addr_bits`` rounds of shift/and/select/xor.  Instead we precompute,
+per 8-bit slice ``k`` of the address, a 256-entry table
+
+    T[k][b][m] = XOR_{j : bit j of b set} Q[m, 8k + j]        (b in 0..255)
+
+so that ``h_m(a) = T[0][a & 0xFF][m] ^ T[1][(a >> 8) & 0xFF][m] ^ ...`` —
+four gathers and three XORs replace the 32-round fold, with *identical*
+results (XOR associativity/commutativity; each address bit contributes its
+``Q`` row exactly once either way).  The tables live on
+:attr:`SignatureSpec.h3_tables` (built once per distinct spec via an
+``lru_cache``, ~16 KB for the default geometry) and :func:`hash_positions`
+uses them; :func:`hash_positions_xorfold` keeps the per-bit reference fold
+for bit-exactness tests and before/after benchmarks
+(``benchmarks/bench_signatures.py``).
+
 Key signature properties used by the protocol (and tested in
 ``tests/test_signatures.py``):
 
@@ -35,9 +52,12 @@ import numpy as np
 
 __all__ = [
     "SignatureSpec",
+    "default_spec",
     "empty_signature",
     "empty_bank",
     "hash_positions",
+    "hash_positions_xorfold",
+    "hash_with_tables",
     "insert",
     "insert_bank_round_robin",
     "query",
@@ -73,6 +93,16 @@ class SignatureSpec:
                 f"sig_bits={self.sig_bits} must be a multiple of "
                 f"32*num_segments={32 * self.num_segments}"
             )
+        seg = self.sig_bits // self.num_segments
+        if seg & (seg - 1):
+            # H3 XORs values < seg_bits; XOR is only closed under a
+            # power-of-two bound.  A non-pow2 segment would hash some
+            # addresses past the segment (and past sig_bits), producing
+            # false negatives on insert+query.
+            raise ValueError(
+                f"seg_bits={seg} (sig_bits/num_segments) must be a power "
+                f"of two for H3 hashing to stay in-segment"
+            )
 
     @property
     def seg_bits(self) -> int:
@@ -86,14 +116,73 @@ class SignatureSpec:
     def words_per_seg(self) -> int:
         return self.seg_bits // 32
 
-    @functools.cached_property
+    @property
+    def num_byte_slices(self) -> int:
+        return (self.addr_bits + 7) // 8
+
+    @property
     def h3_matrix(self) -> np.ndarray:
         """H3 hash family: (num_segments, addr_bits) random values in
         [0, seg_bits).  h_m(a) = XOR_{j : bit j of a set} Q[m, j]."""
-        rng = np.random.default_rng(self.seed)
-        return rng.integers(
-            0, self.seg_bits, size=(self.num_segments, self.addr_bits)
-        ).astype(np.uint32)
+        return _h3_matrix(self)
+
+    @property
+    def h3_tables(self) -> np.ndarray:
+        """Byte-sliced H3 lookup tables: (num_byte_slices, 256, num_segments)
+        uint32, derived from :attr:`h3_matrix` (see module docstring).
+        ``h(a) = XOR_k h3_tables[k, (a >> 8k) & 0xFF, :]`` — bit-exact with
+        the per-bit xor-fold."""
+        return _h3_tables(self)
+
+
+@functools.lru_cache(maxsize=None)
+def _h3_matrix(spec: SignatureSpec) -> np.ndarray:
+    """Sample the H3 matrix once per *distinct* spec (specs are frozen and
+    hashable, so equal specs constructed at different call sites share)."""
+    rng = np.random.default_rng(spec.seed)
+    q = rng.integers(
+        0, spec.seg_bits, size=(spec.num_segments, spec.addr_bits)
+    ).astype(np.uint32)
+    q.setflags(write=False)
+    return q
+
+
+@functools.lru_cache(maxsize=None)
+def _h3_tables(spec: SignatureSpec) -> np.ndarray:
+    """Expand the H3 matrix into byte-sliced lookup tables (one-time, numpy)."""
+    q = _h3_matrix(spec)  # (M, addr_bits)
+    tabs = np.zeros((spec.num_byte_slices, 256, spec.num_segments), np.uint32)
+    byte_vals = np.arange(256, dtype=np.uint32)
+    for k in range(spec.num_byte_slices):
+        for j in range(min(8, spec.addr_bits - 8 * k)):
+            bit_set = ((byte_vals >> j) & 1).astype(bool)
+            tabs[k] ^= np.where(bit_set[:, None], q[None, :, 8 * k + j], 0)
+    tabs.setflags(write=False)
+    return tabs
+
+
+@functools.lru_cache(maxsize=None)
+def _h3_tables_global(spec: SignatureSpec) -> np.ndarray:
+    """Byte tables with the segment offsets pre-folded into slice 0 (hot
+    path).  Hash values are < seg_bits and seg_bits is a power of two
+    (enforced by ``__post_init__``), so the offset bits (m * seg_bits) are
+    disjoint from the hash bits and survive the cross-slice XORs — OR-ing
+    them into slice 0 makes :func:`hash_positions` emit *global* positions
+    with zero extra ops."""
+    tabs = _h3_tables(spec).copy()
+    offs = (np.arange(spec.num_segments, dtype=np.uint32)
+            * np.uint32(spec.seg_bits))
+    tabs[0] |= offs[None, :]
+    tabs.setflags(write=False)
+    return tabs
+
+
+@functools.lru_cache(maxsize=None)
+def default_spec() -> SignatureSpec:
+    """The paper-default spec as a shared singleton.  Call sites that would
+    otherwise build ``SignatureSpec()`` ad hoc should use this so the cached
+    H3 matrix/tables (and jit caches keyed on the spec) are reused."""
+    return SignatureSpec()
 
 
 def empty_signature(spec: SignatureSpec) -> jax.Array:
@@ -108,7 +197,37 @@ def empty_bank(spec: SignatureSpec, num_registers: int) -> jax.Array:
 
 def hash_positions(spec: SignatureSpec, addrs: jax.Array) -> jax.Array:
     """Global bit positions for each address: (N, num_segments) in
-    [0, sig_bits).  Position = segment_offset + H3_m(address)."""
+    [0, sig_bits).  Position = segment_offset + H3_m(address).
+
+    Fast path: byte-sliced table lookups — ``num_byte_slices`` gathers
+    (``jnp.take`` with clip-mode, the fast XLA lowering) and
+    ``num_byte_slices - 1`` XORs, with the segment offsets pre-folded into
+    the slice-0 table.  Bit-exact with :func:`hash_positions_xorfold`
+    (tested in ``tests/test_signatures.py``).
+    """
+    addrs = addrs.astype(jnp.uint32).reshape(-1)
+    return hash_with_tables(addrs, jnp.asarray(_h3_tables_global(spec)), spec)
+
+
+def hash_with_tables(
+    addrs: jax.Array, tabs: jax.Array, spec: SignatureSpec
+) -> jax.Array:
+    """Core byte-sliced lookup: (N,) uint32 addrs x (S, 256, M) tables ->
+    (N, M) uint32 global positions.  ``tabs`` must be the offset-folded
+    tables from :func:`_h3_tables_global`.  Shared by
+    :func:`hash_positions` and the Pallas kernels
+    (``kernels/bloom/bloom.py``) so the two paths cannot drift."""
+    h = jnp.take(tabs[0], addrs & np.uint32(0xFF), axis=0, mode="clip")
+    for k in range(1, spec.num_byte_slices):
+        byte = (addrs >> np.uint32(8 * k)) & np.uint32(0xFF)
+        h = h ^ jnp.take(tabs[k], byte, axis=0, mode="clip")
+    return h
+
+
+def hash_positions_xorfold(spec: SignatureSpec, addrs: jax.Array) -> jax.Array:
+    """Per-bit xor-fold H3 — the original (seed) implementation, kept as the
+    reference for bit-exactness tests and the before/after microbench.
+    ``addr_bits`` rounds of shift/and/select/xor."""
     addrs = addrs.astype(jnp.uint32).reshape(-1)
     q = jnp.asarray(spec.h3_matrix, dtype=jnp.uint32)  # (M, addr_bits)
     h = jnp.zeros((addrs.shape[0], spec.num_segments), dtype=jnp.uint32)

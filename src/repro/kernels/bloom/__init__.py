@@ -1,3 +1,13 @@
-from repro.kernels.bloom.ops import bloom_insert, bloom_intersect, bloom_query
+from repro.kernels.bloom.ops import (
+    bloom_detect_conflicts,
+    bloom_insert,
+    bloom_intersect,
+    bloom_query,
+)
 
-__all__ = ["bloom_insert", "bloom_query", "bloom_intersect"]
+__all__ = [
+    "bloom_insert",
+    "bloom_query",
+    "bloom_intersect",
+    "bloom_detect_conflicts",
+]

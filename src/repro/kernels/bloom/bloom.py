@@ -1,29 +1,39 @@
-"""Pallas TPU kernels for Bloom-signature insert / query / intersect.
+"""Pallas TPU kernels for Bloom-signature insert / query / conflict detect.
 
 The paper's hardware inserts one address per memory access into a 2 Kbit
 register file next to the PIM L1.  On TPU we batch: a block of addresses is
-H3-hashed on the VPU (unrolled xor-fold over address bits — shifts, ands and
-xors are all native VPU ops), expanded against a broadcasted iota of signature
-bit positions, OR-reduced into a block-local bit image, packed 32:1, and
-OR-accumulated into the signature across sequential grid steps.
+H3-hashed on the VPU, decomposed into (word, bit) coordinates of the packed
+signature, and scattered/gathered at *word* granularity.
 
 Design notes (TPU-native, not a port):
 
+* **Byte-sliced H3 in-kernel.**  The hash uses the precomputed lookup tables
+  from :attr:`SignatureSpec.h3_tables` (segment offsets pre-folded, see
+  ``core/signatures.py``): ``num_byte_slices`` table gathers + XORs instead
+  of an ``addr_bits``-round shift/and/select/xor fold.
+* **Word/bit decomposition.**  A global bit position ``pos`` splits into
+  ``word = pos >> 5`` (one of ``num_words`` packed uint32 words, 64 for the
+  paper geometry) and ``bit = 1 << (pos & 31)``.  Insert compares ``word``
+  against a ``num_words``-wide iota — 32x less compare work than the seed
+  kernel's one-hot expand against the full ``sig_bits``-wide iota — then
+  OR-reduces the masked bit contributions down a log2-depth tree.  Query
+  gathers the addressed word (one-hot word-select + sum, exact because the
+  select matrix has exactly one hit per row) and tests the bit mask.  The
+  seed one-hot kernels are kept as ``*_onehot`` for differential tests and
+  the before/after microbench (``benchmarks/bench_signatures.py``).
 * The 2 Kbit signature is tiny; the interesting tiling axis is the *address
   batch*.  ``BlockSpec`` tiles the address stream ``(BLOCK_N,)`` into VMEM and
   revisits the same whole-signature output block every grid step — the
   canonical Pallas accumulation pattern (TPU grids execute sequentially, so
   read-modify-write on the output ref is safe).
-* The one-hot compare ``pos[:, None] == iota[None, :]`` turns the scatter the
-  hardware does with wired decoders into a dense VPU compare + OR-reduce,
-  which is how a systolic/vector machine wants to build a bitset.  The
-  staging buffer is (BLOCK_N * M, sig_bits) bool — ≤ 2 MB in VMEM for the
-  default geometry (256 × 4 × 2048).
-* Bit packing uses shift+sum; safe because after the OR-reduce every
-  (word, bit) pair contributes at most once.
+* ``bloom_detect_conflicts_pallas`` fuses the whole LazySync hot loop —
+  hash -> membership across all G group signatures -> per-address hit-group
+  count — into one kernel, so conflict detection reads only G*num_words
+  packed words instead of G unpacked 2048-bit images.
 
 All kernels are validated in ``interpret=True`` mode against ``ref.py``
-(pure jnp) in ``tests/test_kernel_bloom.py``.
+(pure jnp) in ``tests/test_kernel_bloom.py`` and
+``tests/test_bloom_word_kernels.py``.
 """
 
 from __future__ import annotations
@@ -35,14 +45,31 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.signatures import SignatureSpec
+from repro.core.signatures import (
+    SignatureSpec,
+    _h3_tables_global,
+    hash_with_tables,
+)
 
 DEFAULT_BLOCK_N = 256
 
 
-def _h3_hash_block(addrs, q, spec: SignatureSpec):
-    """H3 hash a (BLOCK_N,) uint32 address block -> (BLOCK_N, M) int32 global
-    bit positions.  Unrolled xor-fold over the address bits (VPU bitwise)."""
+# ---------------------------------------------------------------------------
+# In-kernel H3 hashing
+# ---------------------------------------------------------------------------
+
+
+def _h3_hash_block(addrs, tabs, spec: SignatureSpec):
+    """Byte-sliced H3 for a (BLOCK_N,) uint32 address block -> (BLOCK_N, M)
+    int32 global bit positions.  Delegates to the shared
+    :func:`repro.core.signatures.hash_with_tables` so kernel and jnp paths
+    cannot drift."""
+    return hash_with_tables(addrs.astype(jnp.uint32), tabs, spec).astype(jnp.int32)
+
+
+def _h3_hash_block_xorfold(addrs, q, spec: SignatureSpec):
+    """Seed H3: unrolled xor-fold over the address bits (kept for the legacy
+    one-hot kernels)."""
     addrs = addrs.astype(jnp.uint32)
     h = jnp.zeros((addrs.shape[0], spec.num_segments), dtype=jnp.uint32)
     for j in range(spec.addr_bits):
@@ -54,19 +81,53 @@ def _h3_hash_block(addrs, q, spec: SignatureSpec):
     return (h + seg_off[None, :]).astype(jnp.int32)
 
 
-def _insert_kernel(addr_ref, mask_ref, q_ref, out_ref, *, spec: SignatureSpec):
+def _tree_or(x):
+    """OR-reduce axis 0 of a (R, ...) uint32 array in log2(R) vector steps
+    (Pallas-safe: no lax.reduce with a custom combiner)."""
+    r = x.shape[0]
+    p = 1 << (r - 1).bit_length()
+    if p != r:
+        x = jnp.concatenate(
+            [x, jnp.zeros((p - r,) + x.shape[1:], x.dtype)], axis=0
+        )
+    while x.shape[0] > 1:
+        x = x[0::2] | x[1::2]
+    return x[0]
+
+
+def _word_bit(pos):
+    """Split (.., M) int32 global positions into packed-word index and
+    32-bit lane mask."""
+    word = pos >> 5
+    bit = jnp.left_shift(
+        np.uint32(1), (pos & 31).astype(jnp.uint32)
+    )
+    return word, bit
+
+
+def _tables_operand(spec: SignatureSpec):
+    return jnp.asarray(_h3_tables_global(spec))
+
+
+# ---------------------------------------------------------------------------
+# Word-level insert
+# ---------------------------------------------------------------------------
+
+
+def _insert_kernel(
+    addr_ref, mask_ref, tab_ref, out_ref, *, spec: SignatureSpec
+):
     step = pl.program_id(0)
     addrs = addr_ref[...]
     mask = mask_ref[...]
-    pos = _h3_hash_block(addrs, q_ref[...], spec)  # (BLK, M)
-    pos = jnp.where(mask[:, None] > 0, pos, -1)
-    # One-hot expand: (BLK*M, sig_bits) — scatter-as-compare on the VPU.
-    tgt = jax.lax.broadcasted_iota(jnp.int32, (pos.size, spec.sig_bits), 1)
-    hit = pos.reshape(-1, 1) == tgt
-    bits = jnp.any(hit, axis=0)  # (sig_bits,)
-    packed = bits.reshape(spec.num_words, 32).astype(jnp.uint32)
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    words = jnp.sum(packed << shifts[None, :], axis=1, dtype=jnp.uint32)
+    pos = _h3_hash_block(addrs, tab_ref[...], spec)  # (BLK, M)
+    word, bit = _word_bit(pos)
+    word = jnp.where(mask[:, None] > 0, word, -1)
+    # Scatter-as-compare at word granularity: (BLK*M, num_words).
+    tgt = jax.lax.broadcasted_iota(jnp.int32, (word.size, spec.num_words), 1)
+    hit = word.reshape(-1, 1) == tgt
+    contrib = jnp.where(hit, bit.reshape(-1, 1), np.uint32(0))
+    words = _tree_or(contrib)  # (num_words,)
     prev = jnp.where(step == 0, jnp.zeros_like(words), out_ref[...])
     out_ref[...] = prev | words
 
@@ -96,7 +157,7 @@ def bloom_insert_pallas(
         addrs = jnp.pad(addrs, (0, pad))
         mask = jnp.pad(mask, (0, pad))
     n_pad = addrs.shape[0]
-    q = jnp.asarray(spec.h3_matrix, dtype=jnp.uint32)
+    tabs = _tables_operand(spec)
     grid = (n_pad // block_n,)
     delta = pl.pallas_call(
         functools.partial(_insert_kernel, spec=spec),
@@ -104,27 +165,40 @@ def bloom_insert_pallas(
         in_specs=[
             pl.BlockSpec((block_n,), lambda i: (i,)),
             pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec(q.shape, lambda i: (0, 0)),
+            pl.BlockSpec(tabs.shape, lambda i: (0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((spec.num_words,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((spec.num_words,), jnp.uint32),
         interpret=interpret,
-    )(addrs, mask, q)
+    )(addrs, mask, tabs)
     return sig | delta
 
 
-def _query_kernel(addr_ref, q_ref, bits_ref, out_ref, *, spec: SignatureSpec):
+# ---------------------------------------------------------------------------
+# Word-level query
+# ---------------------------------------------------------------------------
+
+
+def _query_kernel(
+    addr_ref, tab_ref, sig_ref, out_ref, *, spec: SignatureSpec
+):
     addrs = addr_ref[...]
-    pos = _h3_hash_block(addrs, q_ref[...], spec)  # (BLK, M)
-    bits = bits_ref[...]  # (sig_bits,) int32 0/1
-    # Gather-as-compare: member(n, m) = bits[pos[n, m]]
+    pos = _h3_hash_block(addrs, tab_ref[...], spec)  # (BLK, M)
+    word, bit = _word_bit(pos)
+    sig = sig_ref[...]  # (num_words,) uint32 packed
     blk = pos.shape[0]
-    tgt = jax.lax.broadcasted_iota(jnp.int32, (blk * spec.num_segments, spec.sig_bits), 1)
-    onehot = (pos.reshape(-1, 1) == tgt).astype(jnp.int32)
-    looked_up = jnp.sum(onehot * bits[None, :], axis=1)  # (BLK*M,)
-    member = jnp.all(
-        looked_up.reshape(blk, spec.num_segments) > 0, axis=1
+    # Word gather as one-hot select + sum (exact: one hit per row).
+    tgt = jax.lax.broadcasted_iota(
+        jnp.int32, (blk * spec.num_segments, spec.num_words), 1
     )
+    onehot = word.reshape(-1, 1) == tgt
+    looked = jnp.sum(
+        jnp.where(onehot, sig[None, :], np.uint32(0)),
+        axis=1,
+        dtype=jnp.uint32,
+    )  # (BLK*M,)
+    member_seg = (looked & bit.reshape(-1)) != 0
+    member = jnp.all(member_seg.reshape(blk, spec.num_segments), axis=1)
     out_ref[...] = member.astype(jnp.int32)
 
 
@@ -143,22 +217,91 @@ def bloom_query_pallas(
     if pad:
         addrs_flat = jnp.pad(addrs_flat, (0, pad))
     n_pad = addrs_flat.shape[0]
-    q = jnp.asarray(spec.h3_matrix, dtype=jnp.uint32)
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    bits = ((sig[:, None] >> shifts) & np.uint32(1)).reshape(-1).astype(jnp.int32)
+    tabs = _tables_operand(spec)
     out = pl.pallas_call(
         functools.partial(_query_kernel, spec=spec),
         grid=(n_pad // block_n,),
         in_specs=[
             pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec(q.shape, lambda i: (0, 0)),
-            pl.BlockSpec((spec.sig_bits,), lambda i: (0,)),
+            pl.BlockSpec(tabs.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec((spec.num_words,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
         interpret=interpret,
-    )(addrs_flat, q, bits)
+    )(addrs_flat, tabs, sig)
     return out[:n].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# Fused conflict detection (LazySync hot loop)
+# ---------------------------------------------------------------------------
+
+
+def _conflict_kernel(
+    addr_ref, tab_ref, sigs_ref, out_ref, *, spec: SignatureSpec
+):
+    addrs = addr_ref[...]
+    pos = _h3_hash_block(addrs, tab_ref[...], spec)  # (BLK, M)
+    word, bit = _word_bit(pos)
+    sigs = sigs_ref[...]  # (G, num_words) uint32 packed
+    g = sigs.shape[0]
+    blk = pos.shape[0]
+    tgt = jax.lax.broadcasted_iota(
+        jnp.int32, (blk * spec.num_segments, spec.num_words), 1
+    )
+    onehot = word.reshape(-1, 1) == tgt  # (BLK*M, W)
+    looked = jnp.sum(
+        jnp.where(onehot[None, :, :], sigs[:, None, :], np.uint32(0)),
+        axis=2,
+        dtype=jnp.uint32,
+    )  # (G, BLK*M)
+    member_seg = (looked & bit.reshape(1, -1)) != 0
+    member = jnp.all(
+        member_seg.reshape(g, blk, spec.num_segments), axis=2
+    )  # (G, BLK)
+    out_ref[...] = jnp.sum(member.astype(jnp.int32), axis=0)
+
+
+def bloom_detect_conflicts_pallas(
+    spec: SignatureSpec,
+    sigs: jax.Array,
+    addrs: jax.Array,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused hash -> membership-across-groups -> hit count, one kernel.
+
+    ``sigs``: (G, num_words) uint32 packed group signatures; ``addrs``: (N,)
+    touched ids.  Returns (N,) int32: for each address, the number of group
+    signatures that contain it (LazySync flags a conflict when >= 2).
+    """
+    addrs_flat = addrs.reshape(-1).astype(jnp.uint32)
+    n = addrs_flat.shape[0]
+    pad = (-n) % block_n
+    if pad:
+        addrs_flat = jnp.pad(addrs_flat, (0, pad))
+    n_pad = addrs_flat.shape[0]
+    tabs = _tables_operand(spec)
+    out = pl.pallas_call(
+        functools.partial(_conflict_kernel, spec=spec),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec(tabs.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(sigs.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        interpret=interpret,
+    )(addrs_flat, tabs, sigs)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# Batched AND-prefilter (unchanged: already word-level)
+# ---------------------------------------------------------------------------
 
 
 def _intersect_kernel(a_ref, b_ref, out_ref, *, spec: SignatureSpec):
@@ -196,3 +339,112 @@ def bloom_intersect_pallas(
         interpret=interpret,
     )(a, b)
     return out[:bsz].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# Seed one-hot kernels (legacy): kept as the before/after baseline for the
+# microbench and as a second implementation for differential testing.
+# ---------------------------------------------------------------------------
+
+
+def _insert_kernel_onehot(addr_ref, mask_ref, q_ref, out_ref, *, spec: SignatureSpec):
+    step = pl.program_id(0)
+    addrs = addr_ref[...]
+    mask = mask_ref[...]
+    pos = _h3_hash_block_xorfold(addrs, q_ref[...], spec)  # (BLK, M)
+    pos = jnp.where(mask[:, None] > 0, pos, -1)
+    # One-hot expand: (BLK*M, sig_bits) — scatter-as-compare on the VPU.
+    tgt = jax.lax.broadcasted_iota(jnp.int32, (pos.size, spec.sig_bits), 1)
+    hit = pos.reshape(-1, 1) == tgt
+    bits = jnp.any(hit, axis=0)  # (sig_bits,)
+    packed = bits.reshape(spec.num_words, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    words = jnp.sum(packed << shifts[None, :], axis=1, dtype=jnp.uint32)
+    prev = jnp.where(step == 0, jnp.zeros_like(words), out_ref[...])
+    out_ref[...] = prev | words
+
+
+def bloom_insert_pallas_onehot(
+    spec: SignatureSpec,
+    sig: jax.Array,
+    addrs: jax.Array,
+    mask: jax.Array | None = None,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+) -> jax.Array:
+    """Seed insert kernel: xor-fold hash + full-width one-hot expand."""
+    addrs = addrs.reshape(-1).astype(jnp.uint32)
+    n = addrs.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), dtype=jnp.int32)
+    else:
+        mask = mask.reshape(-1).astype(jnp.int32)
+    pad = (-n) % block_n
+    if pad:
+        addrs = jnp.pad(addrs, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    n_pad = addrs.shape[0]
+    q = jnp.asarray(spec.h3_matrix, dtype=jnp.uint32)
+    grid = (n_pad // block_n,)
+    delta = pl.pallas_call(
+        functools.partial(_insert_kernel_onehot, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec(q.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((spec.num_words,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((spec.num_words,), jnp.uint32),
+        interpret=interpret,
+    )(addrs, mask, q)
+    return sig | delta
+
+
+def _query_kernel_onehot(addr_ref, q_ref, bits_ref, out_ref, *, spec: SignatureSpec):
+    addrs = addr_ref[...]
+    pos = _h3_hash_block_xorfold(addrs, q_ref[...], spec)  # (BLK, M)
+    bits = bits_ref[...]  # (sig_bits,) int32 0/1
+    # Gather-as-compare: member(n, m) = bits[pos[n, m]]
+    blk = pos.shape[0]
+    tgt = jax.lax.broadcasted_iota(
+        jnp.int32, (blk * spec.num_segments, spec.sig_bits), 1
+    )
+    onehot = (pos.reshape(-1, 1) == tgt).astype(jnp.int32)
+    looked_up = jnp.sum(onehot * bits[None, :], axis=1)  # (BLK*M,)
+    member = jnp.all(looked_up.reshape(blk, spec.num_segments) > 0, axis=1)
+    out_ref[...] = member.astype(jnp.int32)
+
+
+def bloom_query_pallas_onehot(
+    spec: SignatureSpec,
+    sig: jax.Array,
+    addrs: jax.Array,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+) -> jax.Array:
+    """Seed query kernel: xor-fold hash + one-hot gather over unpacked bits."""
+    addrs_flat = addrs.reshape(-1).astype(jnp.uint32)
+    n = addrs_flat.shape[0]
+    pad = (-n) % block_n
+    if pad:
+        addrs_flat = jnp.pad(addrs_flat, (0, pad))
+    n_pad = addrs_flat.shape[0]
+    q = jnp.asarray(spec.h3_matrix, dtype=jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((sig[:, None] >> shifts) & np.uint32(1)).reshape(-1).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_query_kernel_onehot, spec=spec),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec(q.shape, lambda i: (0, 0)),
+            pl.BlockSpec((spec.sig_bits,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        interpret=interpret,
+    )(addrs_flat, q, bits)
+    return out[:n].astype(bool)

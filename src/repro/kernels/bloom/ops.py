@@ -54,6 +54,27 @@ def bloom_query(
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "use_pallas"))
+def bloom_detect_conflicts(
+    spec: SignatureSpec,
+    sigs: jax.Array,
+    addrs: jax.Array,
+    use_pallas: bool | None = None,
+):
+    """Fused hash + membership-across-groups + hit count.
+
+    ``sigs``: (G, num_words) uint32 packed; ``addrs``: (N,) -> (N,) int32
+    hit-group counts (conflict iff >= 2).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _pallas.bloom_detect_conflicts_pallas(
+            spec, sigs, addrs, interpret=not _on_tpu()
+        )
+    return _ref.bloom_detect_conflicts_ref(spec, sigs, addrs)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "use_pallas"))
 def bloom_intersect(
     spec: SignatureSpec,
     a: jax.Array,

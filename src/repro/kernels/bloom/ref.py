@@ -32,6 +32,18 @@ def bloom_query_ref(
     return sig_lib.query(spec, sig, addrs)
 
 
+def bloom_detect_conflicts_ref(
+    spec: SignatureSpec, sigs: jax.Array, addrs: jax.Array
+) -> jax.Array:
+    """Hit-group counts: sigs (G, num_words) packed, addrs (N,) -> (N,) int32
+    number of group signatures containing each address (LazySync conflicts
+    are counts >= 2)."""
+    pos = sig_lib.hash_positions(spec, addrs).astype(jnp.int32)  # (N, M)
+    bits = sig_lib.unpack_bits(spec, sigs)  # (G, sig_bits)
+    member = jnp.all(bits[:, pos], axis=-1)  # (G, N)
+    return jnp.sum(member.astype(jnp.int32), axis=0)
+
+
 def bloom_intersect_ref(
     spec: SignatureSpec, a: jax.Array, b: jax.Array
 ) -> jax.Array:

@@ -86,7 +86,12 @@ def run_workload(
     lazy_cfg: LazyPIMConfig | None = None,
     **trace_kw,
 ) -> dict[str, SimResult]:
-    """Convenience: trace -> prepare -> run_all."""
+    """Convenience: trace -> prepare -> run_all.
+
+    With ``spec=None``, ``prepare`` applies the shared
+    :func:`repro.core.signatures.default_spec` singleton — one set of
+    byte-sliced H3 tables, one jit cache entry per mechanism — instead of
+    re-deriving the hash family per call."""
     trace = make_trace(app, graph_name, threads=threads, **trace_kw)
     tt = prepare(trace, spec)
     return run_all(tt, hw or HWParams(), mechanisms, lazy_cfg)

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.signatures import SignatureSpec, hash_positions
+from repro.core.signatures import SignatureSpec, default_spec, hash_positions
 from repro.sim.costmodel import HWParams, LINE_BYTES
 from repro.sim.trace import WindowTrace
 
@@ -116,10 +116,15 @@ def _uniq_union_count(a: np.ndarray, b: np.ndarray) -> np.ndarray:
 
 
 def prepare(trace: WindowTrace, spec: SignatureSpec | None = None) -> TraceTensors:
-    """Stage a WindowTrace onto device with precomputed hash tables."""
-    spec = spec or SignatureSpec()
+    """Stage a WindowTrace onto device with precomputed hash tables.
+
+    Uses the shared :func:`default_spec` singleton when no spec is given so
+    the byte-sliced H3 tables (and every jit cache keyed on the spec, which
+    is static TraceTensors metadata) are reused across traces."""
+    spec = spec or default_spec()
     n = trace.num_lines
-    # H3 hash positions for every line in the PIM data region (one-time).
+    # Byte-sliced H3 positions for every line in the PIM data region
+    # (one-time; hash_positions is the fast table-lookup path).
     line_ids = jnp.arange(n, dtype=jnp.uint32)
     line_pos = hash_positions(spec, line_ids).astype(jnp.int32)  # (n, M)
     line_reg = (jnp.arange(n, dtype=jnp.int32)) % CPUWS_REGS

@@ -1,0 +1,75 @@
+"""Tiny seeded-random stand-in for ``hypothesis`` (optional test dep).
+
+When hypothesis is not installed, test modules fall back to this shim:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _fallback_hypothesis import given, settings, st
+
+It implements just the surface the suite uses — ``st.integers``,
+``st.lists``, ``@given`` (positional or keyword strategies) and
+``@settings(max_examples=...)`` — by drawing ``max_examples`` examples from
+a deterministically seeded ``numpy`` RNG.  No shrinking, no database; it
+trades hypothesis's adversarial search for plain seeded sampling so the
+property tests still execute (and still catch bit-level regressions) in
+minimal environments.
+"""
+
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample  # rng -> value
+
+
+def _integers(min_value=0, max_value=2**31 - 1):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _lists(elements, min_size=0, max_size=10):
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.sample(rng) for _ in range(n)]
+
+    return _Strategy(sample)
+
+
+st = types.SimpleNamespace(integers=_integers, lists=_lists)
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = np.random.default_rng((0xB10B, i))
+                args = [s.sample(rng) for s in arg_strategies]
+                kwargs = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                fn(*args, **kwargs)
+
+        # NOT functools.wraps: pytest must see a zero-arg signature, not the
+        # wrapped function's strategy parameters (they'd look like fixtures).
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Applied *outside* @given in this suite, so it just annotates the
+    wrapper with the example budget (extra hypothesis kwargs are ignored)."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco

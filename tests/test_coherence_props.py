@@ -4,7 +4,11 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: seeded-random fallback (same API subset)
+    from _fallback_hypothesis import given, settings, st
 
 from repro.core import signatures as sig
 from repro.core.coherence import LazyPIMConfig, simulate_lazypim

@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: seeded-random fallback (same API subset)
+    from _fallback_hypothesis import given, settings, st
 
 from repro.kernels.lazy_merge.lazy_merge import lazy_merge_pallas
 from repro.kernels.lazy_merge.ref import lazy_merge_ref

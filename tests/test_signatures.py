@@ -4,8 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dep: seeded-random fallback (same API subset)
+    from _fallback_hypothesis import given, settings, st
 
 from repro.core import signatures as S
 
