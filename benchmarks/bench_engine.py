@@ -1,0 +1,173 @@
+"""Packed-word simulator core + single-compile sweep microbenchmarks.
+
+Three measurements, written to ``BENCH_engine.json`` at the repo root:
+
+1. **Per-mechanism steady state** — windows/sec of every mechanism's window
+   scan on the packed uint32-word path (``repro.core.mechanisms`` /
+   ``repro.core.coherence``) vs the boolean seed path
+   (``repro.core._boolref``), same traced-HWParams jit discipline on both
+   sides, compile excluded (min over samples after a warm call).
+2. **End-to-end fig7 wall time** — the full 12-workload × 6-mechanism
+   speedup matrix (``benchmarks.fig7_speedup.run``) vs the same matrix on
+   the boolean path, including trace generation, prepare, and compiles.
+3. **Single-compile sweep** — a ``SWEEP_POINTS``-point off-chip-bandwidth
+   sweep through ``repro.sim.engine.run_sweep`` with the XLA compile count
+   *measured* (jit cache size per mechanism) against the seed-style
+   alternative: HWParams as a ``static_argnums`` jit argument, which
+   recompiles every point.
+
+Usage: PYTHONPATH=src python -m benchmarks.run --bench engine
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.timing import write_bench_json
+from repro.core import _boolref
+from repro.core.coherence import LazyPIMConfig, _lazypim_acc
+from repro.core.mechanisms import ACC_FNS
+from repro.sim import engine
+from repro.sim.costmodel import HWParams
+from repro.sim.engine import run_sweep, stack_hw, stack_traces, summarize
+from repro.sim.prep import prepare
+from repro.sim.trace import all_workloads, make_trace
+
+STEADY_WORKLOADS = (("pagerank", "arxiv"), ("htap128", None))
+SWEEP_POINTS = 4
+SAMPLES = 5
+
+
+def _steady_seconds(fn, *args) -> float:
+    """Min-of-samples steady-state seconds per call, compile + one warm call
+    excluded (the runners return dict pytrees, so block the whole tree)."""
+    jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(SAMPLES):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_mechanisms(hw: HWParams, cfg: LazyPIMConfig) -> dict:
+    packed = dict(ACC_FNS, lazypim=_lazypim_acc)
+    boolean = dict(_boolref.ACC_FNS_BOOL, lazypim=_boolref._lazypim_acc_bool)
+    out = {}
+    for app, g in STEADY_WORKLOADS:
+        tt = prepare(make_trace(app, g, threads=16))
+        rows = {}
+        for mech in ("cpu", "fg", "cg", "nc", "lazypim", "ideal"):
+            args = (tt, hw, cfg) if mech == "lazypim" else (tt, hw)
+            t_p = _steady_seconds(jax.jit(packed[mech]), *args)
+            t_b = _steady_seconds(jax.jit(boolean[mech]), *args)
+            rows[mech] = {
+                "packed_ms": t_p * 1e3,
+                "bool_ms": t_b * 1e3,
+                "packed_windows_per_sec": tt.num_windows / t_p,
+                "bool_windows_per_sec": tt.num_windows / t_b,
+                "speedup": t_b / t_p,
+            }
+        out[tt.name] = {"num_lines": tt.num_lines,
+                        "num_windows": tt.num_windows,
+                        "mechanisms": rows}
+    return out
+
+
+def bench_fig7_wall(hw: HWParams) -> dict:
+    from benchmarks import fig7_speedup
+
+    t0 = time.perf_counter()
+    fig7_speedup.run()
+    packed_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for app, g in all_workloads():
+        tt = prepare(make_trace(app, g, threads=16))
+        summarize(_boolref.run_all_bool(tt, hw), hw)
+    bool_s = time.perf_counter() - t0
+    return {"packed_s": packed_s, "bool_s": bool_s,
+            "speedup": bool_s / packed_s}
+
+
+def bench_sweep(hw: HWParams, cfg: LazyPIMConfig) -> dict:
+    bws = [16.0 * (i + 1) for i in range(SWEEP_POINTS)]
+    tt = prepare(make_trace("pagerank", "arxiv", threads=16))
+    stt = stack_traces([tt] * SWEEP_POINTS)
+    shw = stack_hw([HWParams(offchip_bw_gbs=b) for b in bws])
+
+    before = engine.sweep_cache_sizes()
+    t0 = time.perf_counter()
+    run_sweep(stt, shw, lazy_cfg=cfg)
+    sweep_wall = time.perf_counter() - t0
+    after = engine.sweep_cache_sizes()
+    sweep_compiles = {m: after[m] - before[m] for m in after}
+
+    # Seed-style: HWParams as a static jit argument — one XLA compile per
+    # distinct hw point per mechanism.  Compiles are counted by a trace-time
+    # side effect (the Python body only runs when jit misses), which is
+    # immune to jax's shared-by-function pjit cache.
+    static_compiles = {m: 0 for m in list(ACC_FNS) + ["lazypim"]}
+
+    def counted(fn, m):
+        def g(*args):
+            static_compiles[m] += 1
+            return fn(*args)
+        return g
+
+    static_fns = {m: jax.jit(counted(fn, m), static_argnums=(1,))
+                  for m, fn in ACC_FNS.items()}
+    static_fns["lazypim"] = jax.jit(counted(_lazypim_acc, "lazypim"),
+                                    static_argnums=(1, 2))
+    t0 = time.perf_counter()
+    for b in bws:
+        hw_b = HWParams(offchip_bw_gbs=b)
+        for m, fn in static_fns.items():
+            args = (tt, hw_b, cfg) if m == "lazypim" else (tt, hw_b)
+            jax.block_until_ready(fn(*args))
+    static_wall = time.perf_counter() - t0
+
+    return {
+        "points": SWEEP_POINTS,
+        "swept_field": "offchip_bw_gbs",
+        "sweep_wall_s": sweep_wall,
+        "sweep_compiles_per_mechanism": sweep_compiles,
+        "static_hw_wall_s": static_wall,
+        "static_hw_compiles_per_mechanism": static_compiles,
+        "wall_speedup": static_wall / sweep_wall,
+    }
+
+
+def run() -> dict:
+    hw, cfg = HWParams(), LazyPIMConfig()
+    return {
+        "backend": jax.default_backend(),
+        "steady_state": bench_mechanisms(hw, cfg),
+        "fig7_end_to_end": bench_fig7_wall(hw),
+        "hw_sweep": bench_sweep(hw, cfg),
+    }
+
+
+def main():
+    results = run()
+    out_path = write_bench_json("engine", results)
+    for name, wl in results["steady_state"].items():
+        for mech, r in wl["mechanisms"].items():
+            print(f"{name},{mech},packed_ms,{r['packed_ms']:.2f},bool_ms,"
+                  f"{r['bool_ms']:.2f},speedup,{r['speedup']:.2f}")
+    f7 = results["fig7_end_to_end"]
+    print(f"fig7_wall,packed_s,{f7['packed_s']:.1f},bool_s,{f7['bool_s']:.1f},"
+          f"speedup,{f7['speedup']:.2f}")
+    sw = results["hw_sweep"]
+    print(f"sweep_{sw['points']}pt,compiles,"
+          f"{max(sw['sweep_compiles_per_mechanism'].values())},"
+          f"static_compiles,{max(sw['static_hw_compiles_per_mechanism'].values())},"
+          f"wall_speedup,{sw['wall_speedup']:.2f}")
+    print(f"wrote,{out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,19 +22,15 @@ block).  Run via ``python -m benchmarks.bench_signatures`` or
 from __future__ import annotations
 
 import functools
-import json
-import pathlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.timing import timed as _timed
+from benchmarks.timing import timed as _timed, write_bench_json
 from repro.core import signatures as S
 from repro.kernels.bloom import bloom as K
 
-REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
-OUT_PATH = REPO_ROOT / "BENCH_signatures.json"
 
 HASH_BATCH = 4096
 KERNEL_BATCH = 1024
@@ -181,7 +177,7 @@ def run() -> dict:
 
 def main():
     results = run()
-    OUT_PATH.write_text(json.dumps(results, indent=2) + "\n")
+    out_path = write_bench_json("signatures", results)
     h = results["hash_positions"]
     p = results["pallas_interpret"]
     c = results["conflict_kernel"]
@@ -197,7 +193,7 @@ def main():
     print(f"pallas_insert_query_speedup,{p['insert_query_combined_speedup']:.2f}")
     print(f"conflict_fused_ms,{c['fused_kernel_ms']:.3f}")
     print(f"conflict_two_pass_ms,{c['jnp_two_pass_ms']:.3f}")
-    print(f"wrote,{OUT_PATH}")
+    print(f"wrote,{out_path}")
 
 
 if __name__ == "__main__":

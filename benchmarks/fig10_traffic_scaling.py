@@ -1,21 +1,20 @@
 """Fig. 10: PageRank-arXiv off-chip traffic vs thread count.  Validates:
 CG flush volume grows superlinearly with threads; NC scales poorly; LazyPIM
-scales best (paper: -88.3% vs NC at 16 threads)."""
+scales best (paper: -88.3% vs NC at 16 threads).
 
-from repro.sim.costmodel import HWParams
-from repro.sim.engine import run_all, summarize
-from repro.sim.prep import prepare
-from repro.sim.trace import make_trace
+Shares fig8's single-compile sweep: one batched execution over the stacked
+thread-count axis (``repro.sim.engine.run_sweep``)."""
+
+from benchmarks.fig8_scaling import THREADS, sweep_points
+from repro.sim.engine import summarize
 
 
 def run():
+    points, hws = sweep_points()
     out, cg_flush = {}, {}
-    for threads in (4, 8, 16):
-        hw = HWParams(cpu_cores=threads, pim_cores=threads)
-        tt = prepare(make_trace("pagerank", "arxiv", threads=threads))
-        res = run_all(tt, hw)
-        out[threads] = summarize(res, hw)
-        cg_flush[threads] = res["cg"].flush_lines
+    for i, t in enumerate(THREADS):
+        out[t] = summarize(points[i], hws[i])
+        cg_flush[t] = points[i]["cg"].flush_lines
     return out, cg_flush
 
 

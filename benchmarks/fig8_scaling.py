@@ -1,20 +1,29 @@
 """Fig. 8: PageRank-arXiv speedup vs thread count (4/8/16), normalized to
 CPU-only at each count.  Validates the scaling ORDER: Ideal > LazyPIM > FG
-> {CG, NC}, with FG scaling better than CG/NC."""
+> {CG, NC}, with FG scaling better than CG/NC.
+
+Runs on the single-compile sweep path: the three thread counts are stacked
+trace/hardware axes batched through one compiled step per mechanism
+(``repro.sim.engine.run_sweep``) instead of three sequential jit calls."""
 
 from repro.sim.costmodel import HWParams
-from repro.sim.engine import run_all, summarize
+from repro.sim.engine import run_sweep, stack_hw, stack_traces, summarize
 from repro.sim.prep import prepare
 from repro.sim.trace import make_trace
 
+THREADS = (4, 8, 16)
+
+
+def sweep_points():
+    hws = [HWParams(cpu_cores=t, pim_cores=t) for t in THREADS]
+    tts = stack_traces([prepare(make_trace("pagerank", "arxiv", threads=t))
+                        for t in THREADS])
+    return run_sweep(tts, stack_hw(hws)), hws
+
 
 def run():
-    out = {}
-    for threads in (4, 8, 16):
-        hw = HWParams(cpu_cores=threads, pim_cores=threads)
-        tt = prepare(make_trace("pagerank", "arxiv", threads=threads))
-        out[threads] = summarize(run_all(tt, hw), hw)
-    return out
+    points, hws = sweep_points()
+    return {t: summarize(points[i], hws[i]) for i, t in enumerate(THREADS)}
 
 
 def main():

@@ -5,8 +5,9 @@
 
 Prints each figure's CSV block plus the headline-claims summary from the
 calibration harness (benchmarks.calibrate).  ``--bench`` runs a named
-microbench suite (currently ``signatures``, which also writes
-``BENCH_signatures.json`` at the repo root).
+microbench suite (``signatures`` or ``engine``), each writing its
+``BENCH_<name>.json`` at the repo root via the shared
+``benchmarks.timing.write_bench_json`` helper.
 """
 
 from __future__ import annotations
@@ -28,6 +29,7 @@ MODULES = (
 
 BENCHES = {
     "signatures": "bench_signatures",
+    "engine": "bench_engine",
 }
 
 

@@ -6,12 +6,27 @@ each amortized over ``inner`` back-to-back dispatches so async-dispatch
 pipelining is representative — are aggregated with ``agg``.  Use
 ``agg=min`` on noisy shared boxes (achievable steady state) and
 ``agg=statistics.median`` when a typical-call number is wanted.
+
+:func:`write_bench_json` is the shared result sink: every ``--bench`` suite
+writes ``BENCH_<name>.json`` at the repo root through it.
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 from typing import Callable
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def write_bench_json(name: str, results: dict) -> pathlib.Path:
+    """Write a benchmark suite's result dict to ``BENCH_<name>.json`` at the
+    repo root; returns the path."""
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(results, indent=2) + "\n")
+    return path
 
 
 def timed(

@@ -1,0 +1,489 @@
+"""Boolean seed reference simulators for the packed-engine differential tests.
+
+These are the pre-packing (seed) implementations of all six mechanisms,
+verbatim, running on the ``*_bool`` primitives of ``repro.sim.prep``:
+``(num_lines,)`` boolean bitmaps and ``(sig_bits,)`` boolean Bloom images in
+the scan carry, O(num_lines) scatter staging per update, and the CPUWriteSet
+bank materialized per window.  They take the same traced ``HWParams`` /
+``LazyPIMConfig`` pytrees as the packed path so every float expression sees
+identical operands — ``tests/test_packed_engine.py`` asserts bit-exact
+``SimResult`` equality between the two families, and
+``benchmarks/bench_engine.py`` uses this module as the before-side of the
+packed-engine speedup measurement.
+
+Not part of the public simulation API; use ``repro.sim.engine``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coherence import LazyPIMConfig
+from repro.core.mechanisms import (
+    SimResult,
+    _bw_bound_ns,
+    _cpu_acc_count,
+    _cpu_compute_ns,
+    _cpu_dyn_count,
+    _f,
+    _finalize,
+    _pim_acc_count,
+    _pim_compute_ns,
+    _pim_dram_bytes,
+    _pim_mem_ns,
+    _priv_fill_bytes,
+    _priv_mem_ns,
+)
+from repro.sim.costmodel import CTRL_BYTES, HWParams, LINE_BYTES
+from repro.sim.prep import (
+    XXH_PRIME2,
+    XXH_PRIME5,
+    TraceTensors,
+    bank_bits_from_bitmap_bool,
+    conflict_any_bool,
+    cpu_cache_step_bool,
+    gather_hits_bool,
+    line_window_u01,
+    members_bool,
+    scatter_set_bool,
+    sig_bits_from_ids_bool,
+)
+
+__all__ = [
+    "simulate_cpu_only_bool",
+    "simulate_ideal_bool",
+    "simulate_fg_bool",
+    "simulate_cg_bool",
+    "simulate_nc_bool",
+    "simulate_lazypim_bool",
+    "run_all_bool",
+    "ACC_FNS_BOOL",
+]
+
+
+def _zeros(n: int):
+    return jnp.zeros((n,), dtype=bool)
+
+
+# ---------------------------------------------------------------------------
+# CPU-only
+# ---------------------------------------------------------------------------
+
+
+def _cpu_only_acc_bool(tt: TraceTensors, hw: HWParams):
+    def step(carry, w):
+        present, dirty, t, off, dram, l1, l2 = carry
+        k = tt.kernel_id[w]
+        pre = tt.pre_writes[k]
+        start = tt.kernel_start[w]
+        present = jnp.where(start, present | pre, present)
+        dirty = jnp.where(start, dirty | pre, dirty)
+
+        out = cpu_cache_step_bool(tt, hw, present, dirty, w,
+                                  cap_lines=hw.cpu_only_cache_cap)
+        kern_compute = tt.pim_instr[w] / (hw.cpu_cores * hw.cpu_ipc * hw.freq_ghz)
+        kern_mem = tt.pim_uniq[w] * (hw.offchip_mem_ns / hw.cpu_kernel_mlp) / hw.cpu_cores
+        kern_fill = (tt.pim_uniq[w] + tt.pim_uniq_w[w]) * LINE_BYTES
+
+        off_w = out.fill_bytes + kern_fill + _priv_fill_bytes(tt, w)
+        lat = (_cpu_compute_ns(tt, hw, w) + kern_compute + kern_mem
+               + out.mem_ns + _priv_mem_ns(tt, hw, w))
+        t_w = jnp.maximum(lat, _bw_bound_ns(hw, off_w))
+
+        l1_w = _cpu_dyn_count(tt, w) + _pim_acc_count(tt, w) + tt.cpu_priv[w]
+        l2_w = out.misses + out.hits + tt.pim_uniq[w]
+        return (out.present, out.dirty, t + t_w, off + off_w, dram + off_w,
+                l1 + l1_w, l2 + l2_w), None
+
+    init = (_zeros(tt.num_lines), _zeros(tt.num_lines),
+            _f(0), _f(0), _f(0), _f(0), _f(0))
+    (present, dirty, t, off, dram, l1, l2), _ = jax.lax.scan(
+        step, init, jnp.arange(tt.num_windows))
+    return dict(time_ns=t, offchip_bytes=off, dram_bytes=dram,
+                l1_accesses=l1, l2_accesses=l2)
+
+
+_run_cpu_only_bool = jax.jit(_cpu_only_acc_bool)
+
+
+def simulate_cpu_only_bool(tt: TraceTensors, hw: HWParams) -> SimResult:
+    return _finalize(tt, "cpu", _run_cpu_only_bool(tt, hw))
+
+
+# ---------------------------------------------------------------------------
+# Ideal-PIM
+# ---------------------------------------------------------------------------
+
+
+def _ideal_acc_bool(tt: TraceTensors, hw: HWParams):
+    def step(carry, w):
+        present, dirty, t, off, dram, l1, l2 = carry
+        k = tt.kernel_id[w]
+        start = tt.kernel_start[w]
+        pre = tt.pre_writes[k]
+        present = jnp.where(start, present | pre, present)
+        dirty = jnp.where(start, dirty | pre, dirty)
+
+        out = cpu_cache_step_bool(tt, hw, present, dirty, w)
+        pim_w = scatter_set_bool(_zeros(tt.num_lines), tt.pim_writes[w],
+                                 tt.pim_w_valid[w])
+        present = out.present & ~pim_w
+        dirty = out.dirty & ~pim_w
+
+        pim_ns = _pim_compute_ns(tt, hw, w) + _pim_mem_ns(tt, hw, w)
+        cpu_ns = _cpu_compute_ns(tt, hw, w) + out.mem_ns + _priv_mem_ns(tt, hw, w)
+        off_w = out.fill_bytes + _priv_fill_bytes(tt, w)
+        t_w = jnp.maximum(jnp.maximum(pim_ns, cpu_ns), _bw_bound_ns(hw, off_w))
+        dram_w = off_w + _pim_dram_bytes(tt, w)
+
+        l1_w = _cpu_dyn_count(tt, w) + _pim_acc_count(tt, w) + tt.cpu_priv[w]
+        l2_w = out.misses + out.hits
+        return (present, dirty, t + t_w, off + off_w, dram + dram_w,
+                l1 + l1_w, l2 + l2_w), None
+
+    init = (_zeros(tt.num_lines), _zeros(tt.num_lines),
+            _f(0), _f(0), _f(0), _f(0), _f(0))
+    (present, dirty, t, off, dram, l1, l2), _ = jax.lax.scan(
+        step, init, jnp.arange(tt.num_windows))
+    return dict(time_ns=t, offchip_bytes=off, dram_bytes=dram,
+                l1_accesses=l1, l2_accesses=l2)
+
+
+_run_ideal_bool = jax.jit(_ideal_acc_bool)
+
+
+def simulate_ideal_bool(tt: TraceTensors, hw: HWParams) -> SimResult:
+    return _finalize(tt, "ideal", _run_ideal_bool(tt, hw))
+
+
+# ---------------------------------------------------------------------------
+# Fine-grained MESI (FG)
+# ---------------------------------------------------------------------------
+
+
+def _fg_acc_bool(tt: TraceTensors, hw: HWParams):
+    def step(carry, w):
+        present, dirty, t, off, dram, l1, l2 = carry
+        k = tt.kernel_id[w]
+        start = tt.kernel_start[w]
+        pre = tt.pre_writes[k]
+        present = jnp.where(start, present | pre, present)
+        dirty = jnp.where(start, dirty | pre, dirty)
+
+        out = cpu_cache_step_bool(tt, hw, present, dirty, w)
+        present, dirty = out.present, out.dirty
+
+        rt_ns = hw.fg_msg_exposed_ns
+        msg_bytes = tt.pim_uniq[w] * 8.0 * CTRL_BYTES
+
+        pr_dirty = gather_hits_bool(dirty, tt.pim_reads[w], tt.pim_r_valid[w])
+        pw_dirty = gather_hits_bool(dirty, tt.pim_writes[w], tt.pim_w_valid[w])
+        xfer_lines = (jnp.sum(pr_dirty) + jnp.sum(pw_dirty)).astype(jnp.float32)
+        dirty = dirty & ~scatter_set_bool(_zeros(tt.num_lines), tt.pim_reads[w],
+                                          tt.pim_r_valid[w] & pr_dirty)
+        dirty = dirty & ~scatter_set_bool(_zeros(tt.num_lines), tt.pim_writes[w],
+                                          tt.pim_w_valid[w] & pw_dirty)
+        pim_w = scatter_set_bool(_zeros(tt.num_lines), tt.pim_writes[w],
+                                 tt.pim_w_valid[w])
+        present = present & ~pim_w
+
+        pim_ns = (_pim_compute_ns(tt, hw, w)
+                  + _pim_mem_ns(tt, hw, w, extra_per_miss=rt_ns)
+                  + xfer_lines * LINE_BYTES / hw.offchip_bw_gbs)
+        cpu_ns = _cpu_compute_ns(tt, hw, w) + out.mem_ns + _priv_mem_ns(tt, hw, w)
+        off_w = (out.fill_bytes + _priv_fill_bytes(tt, w) + msg_bytes
+                 + xfer_lines * LINE_BYTES)
+        t_w = jnp.maximum(jnp.maximum(pim_ns, cpu_ns), _bw_bound_ns(hw, off_w))
+        dram_w = out.fill_bytes + _priv_fill_bytes(tt, w) + _pim_dram_bytes(tt, w)
+
+        l1_w = _cpu_dyn_count(tt, w) + _pim_acc_count(tt, w) + tt.cpu_priv[w]
+        l2_w = out.misses + out.hits + tt.pim_uniq[w]
+        return (present, dirty, t + t_w, off + off_w, dram + dram_w,
+                l1 + l1_w, l2 + l2_w), None
+
+    init = (_zeros(tt.num_lines), _zeros(tt.num_lines),
+            _f(0), _f(0), _f(0), _f(0), _f(0))
+    (present, dirty, t, off, dram, l1, l2), _ = jax.lax.scan(
+        step, init, jnp.arange(tt.num_windows))
+    return dict(time_ns=t, offchip_bytes=off, dram_bytes=dram,
+                l1_accesses=l1, l2_accesses=l2)
+
+
+_run_fg_bool = jax.jit(_fg_acc_bool)
+
+
+def simulate_fg_bool(tt: TraceTensors, hw: HWParams) -> SimResult:
+    return _finalize(tt, "fg", _run_fg_bool(tt, hw))
+
+
+# ---------------------------------------------------------------------------
+# Coarse-grained locks (CG)
+# ---------------------------------------------------------------------------
+
+
+def _cg_acc_bool(tt: TraceTensors, hw: HWParams):
+    def step(carry, w):
+        present, dirty, t, off, dram, l1, l2, flushed, blocked = carry
+        k = tt.kernel_id[w]
+        start = tt.kernel_start[w]
+        pre = tt.pre_writes[k]
+        present = jnp.where(start, present | pre, present)
+        dirty = jnp.where(start, dirty | pre, dirty)
+
+        n_flush = jnp.where(start, jnp.sum(dirty), 0).astype(jnp.float32)
+        flush_bytes = n_flush * LINE_BYTES
+        flush_ns = flush_bytes / hw.offchip_bw_gbs + jnp.where(start, hw.offchip_msg_ns, 0.0)
+        dirty = jnp.where(start, jnp.zeros_like(dirty), dirty)
+        present = jnp.where(start, jnp.zeros_like(present), present)
+
+        n_acc = _cpu_acc_count(tt, w)
+        n_dyn = n_acc * tt.cpu_reuse
+        replay_ns = (n_acc * hw.offchip_mem_ns / hw.cpu_mlp
+                     + n_acc * (tt.cpu_reuse - 1.0) * hw.l2_hit_ns) / hw.cpu_cores
+        deferred_fill = n_acc * LINE_BYTES
+
+        present = scatter_set_bool(present, tt.cpu_reads[w], tt.cpu_r_valid[w])
+        present = scatter_set_bool(present, tt.cpu_writes[w], tt.cpu_w_valid[w])
+        dirty = scatter_set_bool(dirty, tt.cpu_writes[w], tt.cpu_w_valid[w])
+
+        pim_ns = _pim_compute_ns(tt, hw, w) + _pim_mem_ns(tt, hw, w)
+        serial_ns = replay_ns + 0.75 * _cpu_compute_ns(tt, hw, w)
+        overlap_ns = 0.25 * _cpu_compute_ns(tt, hw, w) + _priv_mem_ns(tt, hw, w)
+        off_w = flush_bytes + deferred_fill + _priv_fill_bytes(tt, w)
+        t_w = (jnp.maximum(jnp.maximum(pim_ns, overlap_ns) + serial_ns,
+                           _bw_bound_ns(hw, off_w))
+               + flush_ns)
+        dram_w = off_w + _pim_dram_bytes(tt, w)
+
+        l1_w = n_dyn + _pim_acc_count(tt, w) + tt.cpu_priv[w]
+        l2_w = n_dyn + n_flush
+        return (present, dirty, t + t_w, off + off_w, dram + dram_w,
+                l1 + l1_w, l2 + l2_w, flushed + n_flush, blocked + n_dyn), None
+
+    init = (_zeros(tt.num_lines), _zeros(tt.num_lines),
+            _f(0), _f(0), _f(0), _f(0), _f(0), _f(0), _f(0))
+    (present, dirty, t, off, dram, l1, l2, flushed, blocked), _ = jax.lax.scan(
+        step, init, jnp.arange(tt.num_windows))
+    return dict(time_ns=t, offchip_bytes=off, dram_bytes=dram,
+                l1_accesses=l1, l2_accesses=l2,
+                flush_lines=flushed, blocked_accesses=blocked)
+
+
+_run_cg_bool = jax.jit(_cg_acc_bool)
+
+
+def simulate_cg_bool(tt: TraceTensors, hw: HWParams) -> SimResult:
+    return _finalize(tt, "cg", _run_cg_bool(tt, hw))
+
+
+# ---------------------------------------------------------------------------
+# Non-cacheable PIM data (NC)
+# ---------------------------------------------------------------------------
+
+
+def _nc_acc_bool(tt: TraceTensors, hw: HWParams):
+    def step(carry, w):
+        t, off, dram, l1, l2 = carry
+        out = cpu_cache_step_bool(tt, hw, _zeros(tt.num_lines),
+                                  _zeros(tt.num_lines), w, cacheable=False)
+        pim_ns = _pim_compute_ns(tt, hw, w) + _pim_mem_ns(tt, hw, w)
+        cpu_ns = _cpu_compute_ns(tt, hw, w) + out.mem_ns + _priv_mem_ns(tt, hw, w)
+        off_w = out.fill_bytes + _priv_fill_bytes(tt, w)
+        t_w = jnp.maximum(jnp.maximum(pim_ns, cpu_ns), _bw_bound_ns(hw, off_w))
+        dram_w = (out.fill_bytes * hw.nc_dram_energy_factor
+                  + _priv_fill_bytes(tt, w) + _pim_dram_bytes(tt, w))
+        l1_w = _pim_acc_count(tt, w) + tt.cpu_priv[w]
+        l2_w = _f(0)
+        return (t + t_w, off + off_w, dram + dram_w, l1 + l1_w, l2 + l2_w), None
+
+    init = (_f(0), _f(0), _f(0), _f(0), _f(0))
+    (t, off, dram, l1, l2), _ = jax.lax.scan(step, init, jnp.arange(tt.num_windows))
+    return dict(time_ns=t, offchip_bytes=off, dram_bytes=dram,
+                l1_accesses=l1, l2_accesses=l2)
+
+
+_run_nc_bool = jax.jit(_nc_acc_bool)
+
+
+def simulate_nc_bool(tt: TraceTensors, hw: HWParams) -> SimResult:
+    return _finalize(tt, "nc", _run_nc_bool(tt, hw))
+
+
+# ---------------------------------------------------------------------------
+# LazyPIM (seed boolean protocol state)
+# ---------------------------------------------------------------------------
+
+
+def _lazypim_acc_bool(tt: TraceTensors, hw: HWParams, cfg: LazyPIMConfig):
+    n = tt.num_lines
+    sig_bytes_per_commit = 2.0 * tt.sig_bits / 8.0  # PIMReadSet + PIMWriteSet
+    dbi_interval_ns = cfg.dbi_interval_cycles / hw.freq_ghz
+
+    def step(carry, w):
+        (present, dirty, cpuws, conc, read_bm, read_bits, write_bits,
+         replay_ns, dbi_t, acc) = carry
+        k = tt.kernel_id[w]
+        start = tt.kernel_start[w]
+        pre = tt.pre_writes[k]
+        present = jnp.where(start, present | pre, present)
+        dirty = jnp.where(start, dirty | pre, dirty)
+        dirty_before = dirty
+
+        out = cpu_cache_step_bool(tt, hw, present, dirty, w)
+        present, dirty = out.present, out.dirty
+
+        cw_bm = scatter_set_bool(_zeros(n), tt.cpu_writes[w], tt.cpu_w_valid[w])
+        fresh = cfg.partial_commits or start
+        cpuws = jnp.where(fresh, dirty_before, cpuws) | cw_bm
+        conc = jnp.where(fresh, cw_bm, conc | cw_bm)
+
+        r_bits_w = sig_bits_from_ids_bool(tt, tt.pim_reads[w], tt.pim_r_valid[w])
+        w_bits_w = sig_bits_from_ids_bool(tt, tt.pim_writes[w], tt.pim_w_valid[w])
+        read_bits = jnp.where(fresh, r_bits_w, read_bits | r_bits_w)
+        write_bits = jnp.where(fresh, w_bits_w, write_bits | w_bits_w)
+        r_bm_w = scatter_set_bool(_zeros(n), tt.pim_reads[w], tt.pim_r_valid[w])
+        read_bm = jnp.where(fresh, r_bm_w, read_bm | r_bm_w)
+
+        pim_ns = _pim_compute_ns(tt, hw, w) + _pim_mem_ns(tt, hw, w)
+        replay_cheap = _pim_compute_ns(tt, hw, w) + (
+            tt.pim_uniq_w[w] * hw.pim_mem_ns / hw.pim_cores)
+        replay_ns = jnp.where(fresh, replay_cheap, replay_ns + replay_cheap)
+
+        commit = jnp.asarray(True) if cfg.partial_commits else tt.kernel_end[w]
+        bank = bank_bits_from_bitmap_bool(tt, cpuws, cfg.cpuws_regs)
+        c1 = conflict_any_bool(tt, read_bits, bank) & commit
+        exact = jnp.any(cpuws & read_bm) & commit
+
+        conc_bank = bank_bits_from_bitmap_bool(tt, conc, cfg.cpuws_regs)
+        c2 = conflict_any_bool(tt, read_bits, conc_bank)
+        rollbacks = jnp.where(c1, 1.0 + jnp.where(c2, 1.0, 0.0), 0.0)
+
+        flush_mask = members_bool(tt, dirty, read_bits) & c1
+        n_flush1 = jnp.sum(flush_mask).astype(jnp.float32)
+        n_flush_conc = jnp.sum(members_bool(tt, conc, read_bits)).astype(jnp.float32)
+        n_flush = n_flush1 + jnp.maximum(rollbacks - 1.0, 0.0) * n_flush_conc
+        dirty = dirty & ~flush_mask
+
+        flush_bytes = n_flush * LINE_BYTES
+        refetch_ns = n_flush * hw.pim_mem_ns / hw.pim_cores
+        rollback_ns = rollbacks * (replay_ns + refetch_ns
+                                   + 2.0 * hw.offchip_msg_ns
+                                   + sig_bytes_per_commit / hw.offchip_bw_gbs)
+        rollback_ns = rollback_ns + flush_bytes / hw.offchip_bw_gbs
+
+        merge_mask = members_bool(tt, dirty, write_bits) & commit
+        n_merge = jnp.sum(merge_mask).astype(jnp.float32)
+        inv_mask = members_bool(tt, present, write_bits) & commit
+        present = present & ~inv_mask
+        dirty = dirty & ~merge_mask
+
+        attempts = jnp.where(commit, 1.0 + rollbacks, 0.0)
+        commit_bytes = (attempts * (sig_bytes_per_commit + 2.0 * CTRL_BYTES)
+                        + n_merge * LINE_BYTES)
+        commit_ns = jnp.where(
+            commit,
+            cfg.commit_exposure * (2.0 * hw.offchip_msg_ns
+                                   + sig_bytes_per_commit / hw.offchip_bw_gbs),
+            0.0)
+
+        cpu_ns = _cpu_compute_ns(tt, hw, w) + out.mem_ns + _priv_mem_ns(tt, hw, w)
+        off_w = (out.fill_bytes + _priv_fill_bytes(tt, w) + commit_bytes
+                 + flush_bytes)
+        t_w = (jnp.maximum(jnp.maximum(pim_ns, cpu_ns), _bw_bound_ns(hw, off_w))
+               + commit_ns + rollback_ns)
+        dram_w = (out.fill_bytes + _priv_fill_bytes(tt, w) + _pim_dram_bytes(tt, w)
+                  + flush_bytes + n_merge * LINE_BYTES)
+
+        dbi_t = dbi_t + t_w
+        fire = jnp.asarray(cfg.use_dbi) & (dbi_t > dbi_interval_ns)
+        n_dirty = jnp.sum(dirty).astype(jnp.float32)
+        frac = jnp.clip(cfg.dbi_lines_per_fire / jnp.maximum(n_dirty, 1.0), 0.0, 1.0)
+        u = line_window_u01(n, w, XXH_PRIME2, XXH_PRIME5)
+        drain = dirty & (u < frac) & fire
+        n_dbi = jnp.sum(drain).astype(jnp.float32)
+        dirty = dirty & ~drain
+        dbi_t = jnp.where(fire, 0.0, dbi_t)
+        off_w = off_w + n_dbi * LINE_BYTES
+        dram_w = dram_w + n_dbi * LINE_BYTES
+
+        l1_w = _cpu_dyn_count(tt, w) + _pim_acc_count(tt, w) + tt.cpu_priv[w]
+        l2_w = out.misses + out.hits + n_flush + n_dbi
+        acc = dict(
+            time_ns=acc["time_ns"] + t_w,
+            offchip_bytes=acc["offchip_bytes"] + off_w,
+            dram_bytes=acc["dram_bytes"] + dram_w,
+            l1_accesses=acc["l1_accesses"] + l1_w,
+            l2_accesses=acc["l2_accesses"] + l2_w,
+            commits=acc["commits"] + jnp.where(commit, 1.0, 0.0),
+            conflicts_sig=acc["conflicts_sig"] + jnp.where(c1, 1.0, 0.0),
+            conflicts_exact=acc["conflicts_exact"] + jnp.where(exact, 1.0, 0.0),
+            rollbacks=acc["rollbacks"] + rollbacks,
+            flush_lines=acc["flush_lines"] + n_flush,
+            dbi_writebacks=acc["dbi_writebacks"] + n_dbi,
+            sig_bytes=acc["sig_bytes"] + attempts * sig_bytes_per_commit,
+        )
+        zero_bits = jnp.zeros_like(read_bits)
+        read_bits = jnp.where(commit, zero_bits, read_bits)
+        write_bits = jnp.where(commit, zero_bits, write_bits)
+        read_bm = jnp.where(commit, jnp.zeros_like(read_bm), read_bm)
+        conc = jnp.where(commit, jnp.zeros_like(conc), conc)
+        cpuws = jnp.where(commit, jnp.zeros_like(cpuws), cpuws)
+        replay_ns = jnp.where(commit, 0.0, replay_ns)
+
+        return (present, dirty, cpuws, conc, read_bm, read_bits, write_bits,
+                replay_ns, dbi_t, acc), None
+
+    acc0 = {k: _f(0) for k in (
+        "time_ns", "offchip_bytes", "dram_bytes", "l1_accesses", "l2_accesses",
+        "commits", "conflicts_sig", "conflicts_exact", "rollbacks",
+        "flush_lines", "dbi_writebacks", "sig_bytes")}
+    init = (_zeros(n), _zeros(n), _zeros(n), _zeros(n), _zeros(n),
+            jnp.zeros((tt.sig_bits,), bool), jnp.zeros((tt.sig_bits,), bool),
+            _f(0), _f(0), acc0)
+    final, _ = jax.lax.scan(step, init, jnp.arange(tt.num_windows))
+    return final[-1]
+
+
+_run_lazypim_bool = jax.jit(_lazypim_acc_bool)
+
+
+def simulate_lazypim_bool(
+    tt: TraceTensors, hw: HWParams, cfg: LazyPIMConfig | None = None
+) -> SimResult:
+    cfg = cfg or LazyPIMConfig()
+    acc = _run_lazypim_bool(tt, hw, cfg)
+    return SimResult(name=tt.name, mechanism="lazypim",
+                     **{k: float(v) for k, v in acc.items()})
+
+
+ACC_FNS_BOOL = {
+    "cpu": _cpu_only_acc_bool,
+    "ideal": _ideal_acc_bool,
+    "fg": _fg_acc_bool,
+    "cg": _cg_acc_bool,
+    "nc": _nc_acc_bool,
+}
+
+
+def run_all_bool(
+    tt: TraceTensors,
+    hw: HWParams | None = None,
+    mechanisms=("cpu", "fg", "cg", "nc", "lazypim", "ideal"),
+    lazy_cfg: LazyPIMConfig | None = None,
+) -> dict[str, SimResult]:
+    hw = hw or HWParams()
+    sims = {
+        "cpu": simulate_cpu_only_bool,
+        "ideal": simulate_ideal_bool,
+        "fg": simulate_fg_bool,
+        "cg": simulate_cg_bool,
+        "nc": simulate_nc_bool,
+    }
+    out = {}
+    for m in mechanisms:
+        if m == "lazypim":
+            out[m] = simulate_lazypim_bool(tt, hw, lazy_cfg)
+        else:
+            out[m] = sims[m](tt, hw)
+    return out

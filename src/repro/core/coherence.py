@@ -27,6 +27,26 @@ The protocol, per partial-kernel window:
 signatures accumulate across the whole kernel and a single conflict check
 happens at kernel end (saturated filters ⇒ high false-positive rates), with
 rollback replaying the entire kernel.
+
+**Packed hot path.**  All protocol state in the scan carry is packed uint32
+words (see ``repro.sim.prep``): five ``ceil(n/32)``-word line bitmaps plus
+two ``sig_bits/32``-word Bloom images, instead of the seed's five ``(n,)``
+and two ``(sig_bits,)`` boolean arrays.  Per window the step gathers each
+signature image against the static per-line hash-position table **once**
+(:func:`repro.sim.prep.line_sig_hits`) and derives every consumer from that
+gather: both conflict checks (:func:`repro.sim.prep.conflict_from_hits`
+fuses ``bank_bits_from_bitmap`` + ``conflict_any`` into a mod-16 segment
+reduction with no scatter) and all membership masks
+(:func:`repro.sim.prep.members_from_hits`).  The seed path materialized the
+16 × 2 Kbit bank twice per window and re-gathered per membership call.  The
+boolean seed implementation survives as
+:func:`repro.core._boolref.simulate_lazypim_bool` and the differential tests
+assert bit-exact ``SimResult`` equality.
+
+``LazyPIMConfig`` is a registered pytree: numeric knobs (DBI interval and
+batch, commit exposure, the DBI enable) are traced data leaves, so sweeping
+them reuses one compiled step; ``partial_commits`` (changes the dataflow),
+``cpuws_regs`` (bank geometry) and ``max_rollbacks`` stay static metadata.
 """
 
 from __future__ import annotations
@@ -49,15 +69,21 @@ from repro.core.mechanisms import (
     _pim_mem_ns,
     _priv_fill_bytes,
     _priv_mem_ns,
-    _zeros,
+    _zwords,
 )
 from repro.sim.costmodel import CTRL_BYTES, HWParams, LINE_BYTES
 from repro.sim.prep import (
+    CPUWS_REGS,
+    XXH_PRIME2,
+    XXH_PRIME5,
     TraceTensors,
-    bank_bits_from_bitmap,
-    conflict_any,
+    conflict_from_hits,
     cpu_cache_step,
-    members,
+    line_sig_hits,
+    line_window_u01,
+    members_from_hits,
+    pack_bitmap,
+    popcount_words,
     scatter_set,
     sig_bits_from_ids,
 )
@@ -65,9 +91,21 @@ from repro.sim.prep import (
 __all__ = ["LazyPIMConfig", "simulate_lazypim"]
 
 
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    meta_fields=("partial_commits", "max_rollbacks", "cpuws_regs"),
+    data_fields=("use_dbi", "dbi_interval_cycles", "dbi_lines_per_fire",
+                 "commit_exposure"),
+)
 @dataclasses.dataclass(frozen=True)
 class LazyPIMConfig:
-    """Protocol parameters (defaults = the paper's implementation, §5)."""
+    """Protocol parameters (defaults = the paper's implementation, §5).
+
+    ``partial_commits`` selects the dataflow (fig. 12 ablation) and
+    ``cpuws_regs``/``max_rollbacks`` are structural, so they are static
+    metadata; the numeric knobs are traced pytree leaves — a config sweep
+    reuses the single compiled step function.
+    """
 
     partial_commits: bool = True
     use_dbi: bool = True
@@ -86,8 +124,13 @@ class LazyPIMConfig:
     commit_exposure: float = 0.15
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2))
-def _run_lazypim(tt: TraceTensors, hw: HWParams, cfg: LazyPIMConfig):
+def _lazypim_acc(tt: TraceTensors, hw: HWParams, cfg: LazyPIMConfig):
+    if cfg.cpuws_regs != CPUWS_REGS:
+        # The fused conflict reduction groups lines by the static
+        # line_reg = id % CPUWS_REGS assignment baked into the trace.
+        raise NotImplementedError(
+            f"cpuws_regs={cfg.cpuws_regs} != trace register assignment "
+            f"({CPUWS_REGS})")
     n = tt.num_lines
     sig_bytes_per_commit = 2.0 * tt.sig_bits / 8.0  # PIMReadSet + PIMWriteSet
     dbi_interval_ns = cfg.dbi_interval_cycles / hw.freq_ghz
@@ -97,7 +140,7 @@ def _run_lazypim(tt: TraceTensors, hw: HWParams, cfg: LazyPIMConfig):
          replay_ns, dbi_t, acc) = carry
         k = tt.kernel_id[w]
         start = tt.kernel_start[w]
-        pre = tt.pre_writes[k]
+        pre = tt.pre_writes_words[k]
         # Inter-kernel processor phase dirties lines before the kernel launch.
         present = jnp.where(start, present | pre, present)
         dirty = jnp.where(start, dirty | pre, dirty)
@@ -108,7 +151,7 @@ def _run_lazypim(tt: TraceTensors, hw: HWParams, cfg: LazyPIMConfig):
         present, dirty = out.present, out.dirty
 
         # --- signature recording -------------------------------------------
-        cw_bm = scatter_set(_zeros(n), tt.cpu_writes[w], tt.cpu_w_valid[w])
+        cw_bm = scatter_set(_zwords(tt), tt.cpu_writes[w], tt.cpu_w_valid[w], n)
         fresh = cfg.partial_commits or start
         # CPUWriteSet: dirty lines scanned at (partial-)kernel start + all
         # concurrent CPU writes since.
@@ -119,7 +162,7 @@ def _run_lazypim(tt: TraceTensors, hw: HWParams, cfg: LazyPIMConfig):
         w_bits_w = sig_bits_from_ids(tt, tt.pim_writes[w], tt.pim_w_valid[w])
         read_bits = jnp.where(fresh, r_bits_w, read_bits | r_bits_w)
         write_bits = jnp.where(fresh, w_bits_w, write_bits | w_bits_w)
-        r_bm_w = scatter_set(_zeros(n), tt.pim_reads[w], tt.pim_r_valid[w])
+        r_bm_w = scatter_set(_zwords(tt), tt.pim_reads[w], tt.pim_r_valid[w], n)
         read_bm = jnp.where(fresh, r_bm_w, read_bm | r_bm_w)
 
         pim_ns = _pim_compute_ns(tt, hw, w) + _pim_mem_ns(tt, hw, w)
@@ -133,22 +176,24 @@ def _run_lazypim(tt: TraceTensors, hw: HWParams, cfg: LazyPIMConfig):
 
         # --- commit / conflict detection ------------------------------------
         commit = jnp.asarray(True) if cfg.partial_commits else tt.kernel_end[w]
-        bank = bank_bits_from_bitmap(tt, cpuws, cfg.cpuws_regs)
-        c1 = conflict_any(tt, read_bits, bank) & commit
-        exact = jnp.any(cpuws & read_bm) & commit
+        # One gather per signature image serves both conflict checks and all
+        # membership masks below.
+        rhits = line_sig_hits(tt, read_bits)    # (n, M)
+        c1 = conflict_from_hits(tt, cpuws, rhits, cfg.cpuws_regs) & commit
+        exact = jnp.any((cpuws & read_bm) != 0) & commit
 
         # Rollback path: flush dirty∩PIMReadSet (with FPs), replay; fresh
         # concurrent writes can conflict again; locked after max_rollbacks.
-        conc_bank = bank_bits_from_bitmap(tt, conc, cfg.cpuws_regs)
-        c2 = conflict_any(tt, read_bits, conc_bank)
+        c2 = conflict_from_hits(tt, conc, rhits, cfg.cpuws_regs)
         # A second conflict during the (shorter) re-execution adds one more
         # rollback; after max_rollbacks the conflicting lines are locked and
         # the commit is guaranteed (§5.5).
         rollbacks = jnp.where(c1, 1.0 + jnp.where(c2, 1.0, 0.0), 0.0)
 
-        flush_mask = members(tt, dirty, read_bits) & c1
-        n_flush1 = jnp.sum(flush_mask).astype(jnp.float32)
-        n_flush_conc = jnp.sum(members(tt, conc, read_bits)).astype(jnp.float32)
+        c1_mask = jnp.where(c1, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+        flush_mask = members_from_hits(dirty, rhits) & c1_mask
+        n_flush1 = popcount_words(flush_mask).astype(jnp.float32)
+        n_flush_conc = popcount_words(members_from_hits(conc, rhits)).astype(jnp.float32)
         n_flush = n_flush1 + jnp.maximum(rollbacks - 1.0, 0.0) * n_flush_conc
         dirty = dirty & ~flush_mask
 
@@ -160,9 +205,11 @@ def _run_lazypim(tt: TraceTensors, hw: HWParams, cfg: LazyPIMConfig):
         rollback_ns = rollback_ns + flush_bytes / hw.offchip_bw_gbs
 
         # Successful commit: WAW merge + clean-line invalidation + drain.
-        merge_mask = members(tt, dirty, write_bits) & commit
-        n_merge = jnp.sum(merge_mask).astype(jnp.float32)
-        inv_mask = members(tt, present, write_bits) & commit
+        whits = line_sig_hits(tt, write_bits)
+        commit_mask = jnp.where(commit, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+        merge_mask = members_from_hits(dirty, whits) & commit_mask
+        n_merge = popcount_words(merge_mask).astype(jnp.float32)
+        inv_mask = members_from_hits(present, whits) & commit_mask
         present = present & ~inv_mask
         dirty = dirty & ~merge_mask
 
@@ -189,13 +236,12 @@ def _run_lazypim(tt: TraceTensors, hw: HWParams, cfg: LazyPIMConfig):
         # periods, so each fire writes back a bounded batch.
         dbi_t = dbi_t + t_w
         fire = jnp.asarray(cfg.use_dbi) & (dbi_t > dbi_interval_ns)
-        n_dirty = jnp.sum(dirty).astype(jnp.float32)
+        n_dirty = popcount_words(dirty).astype(jnp.float32)
         frac = jnp.clip(cfg.dbi_lines_per_fire / jnp.maximum(n_dirty, 1.0), 0.0, 1.0)
-        hsh = (jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(2246822519)
-               + w.astype(jnp.uint32) * jnp.uint32(374761393))
-        u = ((hsh >> jnp.uint32(16)) & jnp.uint32(0xFFFF)).astype(jnp.float32) / 65536.0
-        drain = dirty & (u < frac) & fire
-        n_dbi = jnp.sum(drain).astype(jnp.float32)
+        u = line_window_u01(n, w, XXH_PRIME2, XXH_PRIME5)
+        fire_mask = jnp.where(fire, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+        drain = dirty & pack_bitmap(u < frac) & fire_mask
+        n_dbi = popcount_words(drain).astype(jnp.float32)
         dirty = dirty & ~drain
         dbi_t = jnp.where(fire, 0.0, dbi_t)
         off_w = off_w + n_dbi * LINE_BYTES
@@ -234,11 +280,15 @@ def _run_lazypim(tt: TraceTensors, hw: HWParams, cfg: LazyPIMConfig):
         "time_ns", "offchip_bytes", "dram_bytes", "l1_accesses", "l2_accesses",
         "commits", "conflicts_sig", "conflicts_exact", "rollbacks",
         "flush_lines", "dbi_writebacks", "sig_bytes")}
-    init = (_zeros(n), _zeros(n), _zeros(n), _zeros(n), _zeros(n),
-            jnp.zeros((tt.sig_bits,), bool), jnp.zeros((tt.sig_bits,), bool),
+    sig_zero = jnp.zeros((tt.sig_words,), jnp.uint32)
+    init = (_zwords(tt), _zwords(tt), _zwords(tt), _zwords(tt), _zwords(tt),
+            sig_zero, sig_zero,
             _f(0), _f(0), acc0)
     final, _ = jax.lax.scan(step, init, jnp.arange(tt.num_windows))
     return final[-1]
+
+
+_run_lazypim = jax.jit(_lazypim_acc)
 
 
 def simulate_lazypim(

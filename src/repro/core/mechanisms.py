@@ -14,6 +14,14 @@ Five mechanisms share one window-granular execution model (see
 * ``nc``        — PIM data non-cacheable in the processor: every CPU access
   to the region is an off-chip DRAM access.
 
+The simulators run on the **packed word path** of ``repro.sim.prep``: every
+per-line bitmap in the scan carry is a ``ceil(num_lines/32)`` uint32 array,
+and ``HWParams`` is a traced pytree — one compiled step function serves
+every hardware point (``repro.sim.engine.run_sweep`` vmaps it over stacked
+sweep axes).  The boolean seed implementations live in
+``repro.core._boolref`` and are asserted bit-exact by
+``tests/test_packed_engine.py``.
+
 Each returns a :class:`SimResult` with time / traffic / energy and the
 coherence-event counters the benchmarks report.  LazyPIM itself lives in
 ``repro.core.coherence``.
@@ -22,7 +30,6 @@ coherence-event counters the benchmarks report.  LazyPIM itself lives in
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +39,7 @@ from repro.sim.prep import (
     TraceTensors,
     cpu_cache_step,
     gather_hits,
+    popcount_words,
     scatter_set,
 )
 
@@ -42,6 +50,7 @@ __all__ = [
     "simulate_fg",
     "simulate_cg",
     "simulate_nc",
+    "ACC_FNS",
 ]
 
 
@@ -85,8 +94,9 @@ class SimResult:
         return self.conflicts_exact / max(self.commits, 1.0)
 
 
-def _zeros(n: int):
-    return jnp.zeros((n,), dtype=bool)
+def _zwords(tt: TraceTensors):
+    """Empty packed line bitmap."""
+    return jnp.zeros((tt.num_line_words,), dtype=jnp.uint32)
 
 
 def _f(x):
@@ -102,7 +112,7 @@ def _pim_compute_ns(tt: TraceTensors, hw: HWParams, w):
     return tt.pim_instr[w] / (hw.pim_cores * hw.pim_ipc * hw.freq_ghz)
 
 
-def _pim_mem_ns(tt: TraceTensors, hw: HWParams, w, extra_per_miss: float = 0.0):
+def _pim_mem_ns(tt: TraceTensors, hw: HWParams, w, extra_per_miss=0.0):
     return tt.pim_uniq[w] * (hw.pim_mem_ns + extra_per_miss) / hw.pim_cores
 
 
@@ -154,12 +164,11 @@ def _finalize(tt: TraceTensors, mech: str, acc: dict) -> SimResult:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _run_cpu_only(tt: TraceTensors, hw: HWParams):
+def _cpu_only_acc(tt: TraceTensors, hw: HWParams):
     def step(carry, w):
         present, dirty, t, off, dram, l1, l2 = carry
         k = tt.kernel_id[w]
-        pre = tt.pre_writes[k]
+        pre = tt.pre_writes_words[k]
         start = tt.kernel_start[w]
         present = jnp.where(start, present | pre, present)
         dirty = jnp.where(start, dirty | pre, dirty)
@@ -183,12 +192,15 @@ def _run_cpu_only(tt: TraceTensors, hw: HWParams):
         return (out.present, out.dirty, t + t_w, off + off_w, dram + off_w,
                 l1 + l1_w, l2 + l2_w), None
 
-    init = (_zeros(tt.num_lines), _zeros(tt.num_lines),
+    init = (_zwords(tt), _zwords(tt),
             _f(0), _f(0), _f(0), _f(0), _f(0))
     (present, dirty, t, off, dram, l1, l2), _ = jax.lax.scan(
         step, init, jnp.arange(tt.num_windows))
     return dict(time_ns=t, offchip_bytes=off, dram_bytes=dram,
                 l1_accesses=l1, l2_accesses=l2)
+
+
+_run_cpu_only = jax.jit(_cpu_only_acc)
 
 
 def simulate_cpu_only(tt: TraceTensors, hw: HWParams) -> SimResult:
@@ -200,20 +212,20 @@ def simulate_cpu_only(tt: TraceTensors, hw: HWParams) -> SimResult:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _run_ideal(tt: TraceTensors, hw: HWParams):
+def _ideal_acc(tt: TraceTensors, hw: HWParams):
     def step(carry, w):
         present, dirty, t, off, dram, l1, l2 = carry
         k = tt.kernel_id[w]
         start = tt.kernel_start[w]
-        pre = tt.pre_writes[k]
+        pre = tt.pre_writes_words[k]
         present = jnp.where(start, present | pre, present)
         dirty = jnp.where(start, dirty | pre, dirty)
 
         out = cpu_cache_step(tt, hw, present, dirty, w)
         # PIM writes update DRAM; CPU copies of those lines are refreshed for
         # free (ideal), modeled as invalidation without any message cost.
-        pim_w = scatter_set(_zeros(tt.num_lines), tt.pim_writes[w], tt.pim_w_valid[w])
+        pim_w = scatter_set(_zwords(tt), tt.pim_writes[w], tt.pim_w_valid[w],
+                            tt.num_lines)
         present = out.present & ~pim_w
         dirty = out.dirty & ~pim_w
 
@@ -228,12 +240,15 @@ def _run_ideal(tt: TraceTensors, hw: HWParams):
         return (present, dirty, t + t_w, off + off_w, dram + dram_w,
                 l1 + l1_w, l2 + l2_w), None
 
-    init = (_zeros(tt.num_lines), _zeros(tt.num_lines),
+    init = (_zwords(tt), _zwords(tt),
             _f(0), _f(0), _f(0), _f(0), _f(0))
     (present, dirty, t, off, dram, l1, l2), _ = jax.lax.scan(
         step, init, jnp.arange(tt.num_windows))
     return dict(time_ns=t, offchip_bytes=off, dram_bytes=dram,
                 l1_accesses=l1, l2_accesses=l2)
+
+
+_run_ideal = jax.jit(_ideal_acc)
 
 
 def simulate_ideal(tt: TraceTensors, hw: HWParams) -> SimResult:
@@ -245,13 +260,12 @@ def simulate_ideal(tt: TraceTensors, hw: HWParams) -> SimResult:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _run_fg(tt: TraceTensors, hw: HWParams):
+def _fg_acc(tt: TraceTensors, hw: HWParams):
     def step(carry, w):
         present, dirty, t, off, dram, l1, l2 = carry
         k = tt.kernel_id[w]
         start = tt.kernel_start[w]
-        pre = tt.pre_writes[k]
+        pre = tt.pre_writes_words[k]
         present = jnp.where(start, present | pre, present)
         dirty = jnp.where(start, dirty | pre, dirty)
 
@@ -270,12 +284,13 @@ def _run_fg(tt: TraceTensors, hw: HWParams):
         pw_dirty = gather_hits(dirty, tt.pim_writes[w], tt.pim_w_valid[w])
         xfer_lines = (jnp.sum(pr_dirty) + jnp.sum(pw_dirty)).astype(jnp.float32)
         # Ownership moves to PIM: lines leave the CPU dirty set.
-        dirty = dirty & ~scatter_set(_zeros(tt.num_lines), tt.pim_reads[w],
-                                     tt.pim_r_valid[w] & pr_dirty)
-        dirty = dirty & ~scatter_set(_zeros(tt.num_lines), tt.pim_writes[w],
-                                     tt.pim_w_valid[w] & pw_dirty)
+        dirty = dirty & ~scatter_set(_zwords(tt), tt.pim_reads[w],
+                                     tt.pim_r_valid[w] & pr_dirty, tt.num_lines)
+        dirty = dirty & ~scatter_set(_zwords(tt), tt.pim_writes[w],
+                                     tt.pim_w_valid[w] & pw_dirty, tt.num_lines)
         # PIM exclusive writes invalidate CPU copies (next CPU access misses).
-        pim_w = scatter_set(_zeros(tt.num_lines), tt.pim_writes[w], tt.pim_w_valid[w])
+        pim_w = scatter_set(_zwords(tt), tt.pim_writes[w], tt.pim_w_valid[w],
+                            tt.num_lines)
         present = present & ~pim_w
 
         pim_ns = (_pim_compute_ns(tt, hw, w)
@@ -292,12 +307,15 @@ def _run_fg(tt: TraceTensors, hw: HWParams):
         return (present, dirty, t + t_w, off + off_w, dram + dram_w,
                 l1 + l1_w, l2 + l2_w), None
 
-    init = (_zeros(tt.num_lines), _zeros(tt.num_lines),
+    init = (_zwords(tt), _zwords(tt),
             _f(0), _f(0), _f(0), _f(0), _f(0))
     (present, dirty, t, off, dram, l1, l2), _ = jax.lax.scan(
         step, init, jnp.arange(tt.num_windows))
     return dict(time_ns=t, offchip_bytes=off, dram_bytes=dram,
                 l1_accesses=l1, l2_accesses=l2)
+
+
+_run_fg = jax.jit(_fg_acc)
 
 
 def simulate_fg(tt: TraceTensors, hw: HWParams) -> SimResult:
@@ -309,18 +327,17 @@ def simulate_fg(tt: TraceTensors, hw: HWParams) -> SimResult:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _run_cg(tt: TraceTensors, hw: HWParams):
+def _cg_acc(tt: TraceTensors, hw: HWParams):
     def step(carry, w):
         present, dirty, t, off, dram, l1, l2, flushed, blocked = carry
         k = tt.kernel_id[w]
         start = tt.kernel_start[w]
-        pre = tt.pre_writes[k]
+        pre = tt.pre_writes_words[k]
         present = jnp.where(start, present | pre, present)
         dirty = jnp.where(start, dirty | pre, dirty)
 
         # Kernel launch: flush EVERY dirty line in the region, invalidate all.
-        n_flush = jnp.where(start, jnp.sum(dirty), 0).astype(jnp.float32)
+        n_flush = jnp.where(start, popcount_words(dirty), 0).astype(jnp.float32)
         flush_bytes = n_flush * LINE_BYTES
         flush_ns = flush_bytes / hw.offchip_bw_gbs + jnp.where(start, hw.offchip_msg_ns, 0.0)
         dirty = jnp.where(start, jnp.zeros_like(dirty), dirty)
@@ -343,9 +360,12 @@ def _run_cg(tt: TraceTensors, hw: HWParams):
         # The replayed accesses repopulate the cache and re-dirty the
         # written lines — which the NEXT kernel launch flushes again
         # (the CG flush/refetch ping-pong of §3.2).
-        present = scatter_set(present, tt.cpu_reads[w], tt.cpu_r_valid[w])
-        present = scatter_set(present, tt.cpu_writes[w], tt.cpu_w_valid[w])
-        dirty = scatter_set(dirty, tt.cpu_writes[w], tt.cpu_w_valid[w])
+        present = scatter_set(present, tt.cpu_reads[w], tt.cpu_r_valid[w],
+                              tt.num_lines)
+        present = scatter_set(present, tt.cpu_writes[w], tt.cpu_w_valid[w],
+                              tt.num_lines)
+        dirty = scatter_set(dirty, tt.cpu_writes[w], tt.cpu_w_valid[w],
+                            tt.num_lines)
 
         # A quarter of the thread compute is region-independent (private
         # data) and overlaps the kernel; the rest stalls at its first
@@ -364,13 +384,16 @@ def _run_cg(tt: TraceTensors, hw: HWParams):
         return (present, dirty, t + t_w, off + off_w, dram + dram_w,
                 l1 + l1_w, l2 + l2_w, flushed + n_flush, blocked + n_dyn), None
 
-    init = (_zeros(tt.num_lines), _zeros(tt.num_lines),
+    init = (_zwords(tt), _zwords(tt),
             _f(0), _f(0), _f(0), _f(0), _f(0), _f(0), _f(0))
     (present, dirty, t, off, dram, l1, l2, flushed, blocked), _ = jax.lax.scan(
         step, init, jnp.arange(tt.num_windows))
     return dict(time_ns=t, offchip_bytes=off, dram_bytes=dram,
                 l1_accesses=l1, l2_accesses=l2,
                 flush_lines=flushed, blocked_accesses=blocked)
+
+
+_run_cg = jax.jit(_cg_acc)
 
 
 def simulate_cg(tt: TraceTensors, hw: HWParams) -> SimResult:
@@ -382,11 +405,10 @@ def simulate_cg(tt: TraceTensors, hw: HWParams) -> SimResult:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _run_nc(tt: TraceTensors, hw: HWParams):
+def _nc_acc(tt: TraceTensors, hw: HWParams):
     def step(carry, w):
         t, off, dram, l1, l2 = carry
-        out = cpu_cache_step(tt, hw, _zeros(tt.num_lines), _zeros(tt.num_lines),
+        out = cpu_cache_step(tt, hw, _zwords(tt), _zwords(tt),
                              w, cacheable=False)
         pim_ns = _pim_compute_ns(tt, hw, w) + _pim_mem_ns(tt, hw, w)
         cpu_ns = _cpu_compute_ns(tt, hw, w) + out.mem_ns + _priv_mem_ns(tt, hw, w)
@@ -406,5 +428,20 @@ def _run_nc(tt: TraceTensors, hw: HWParams):
                 l1_accesses=l1, l2_accesses=l2)
 
 
+_run_nc = jax.jit(_nc_acc)
+
+
 def simulate_nc(tt: TraceTensors, hw: HWParams) -> SimResult:
     return _finalize(tt, "nc", _run_nc(tt, hw))
+
+
+# Unjitted window-scan accumulators, keyed by mechanism name — the raw
+# step functions ``repro.sim.engine.run_sweep`` vmaps over stacked
+# trace/hardware axes (LazyPIM registers itself in ``repro.core.coherence``).
+ACC_FNS = {
+    "cpu": _cpu_only_acc,
+    "ideal": _ideal_acc,
+    "fg": _fg_acc,
+    "cg": _cg_acc,
+    "nc": _nc_acc,
+}

@@ -22,13 +22,24 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+
 LINE_BYTES = 64
 CTRL_BYTES = 8  # coherence request/ack packet payload
 
-
 @dataclasses.dataclass(frozen=True)
 class HWParams:
-    """Hardware constants. Defaults model the paper's Table 1 system."""
+    """Hardware constants. Defaults model the paper's Table 1 system.
+
+    Registered as a jit-traceable pytree with **every** field as a data
+    leaf: no field determines an array shape or Python-level control flow
+    (core counts, latencies, bandwidths, energies, and cache caps all enter
+    the cost model arithmetically), so a single compiled simulator step
+    serves every HWParams point and :func:`repro.sim.engine.run_sweep` can
+    ``vmap`` one step function over stacked parameter axes instead of
+    recompiling per sweep point (the seed passed HWParams via
+    ``static_argnums``, paying one XLA compile per distinct value).
+    """
 
     # --- compute ---
     cpu_cores: int = 16
@@ -102,6 +113,15 @@ class HWParams:
 
     def internal_transfer_ns(self, num_bytes):
         return num_bytes / self.internal_bw_gbs
+
+
+# Every field is a data leaf (see the class docstring), so the registration
+# derives the list from the dataclass itself — one source of truth.
+jax.tree_util.register_dataclass(
+    HWParams,
+    data_fields=tuple(f.name for f in dataclasses.fields(HWParams)),
+    meta_fields=(),
+)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -5,13 +5,39 @@ This is the gem5-replacement entry point used by the benchmarks:
     tt = prepare(make_trace("pagerank", "arxiv", threads=16))
     results = run_all(tt, HWParams())           # mech -> SimResult
     table = summarize(results, HWParams())      # normalized to CPU-only
+
+**Sweeps compile once.**  ``HWParams`` and ``LazyPIMConfig`` are traced
+pytrees (no static jit args), so a parameter sweep does not re-trigger XLA
+compilation per point; :func:`run_sweep` goes further and ``jax.vmap``s one
+compiled step function over *stacked* hardware/trace axes — a fig8/fig10
+style sweep is one compile plus one batched execution instead of N
+sequential jit misses.  Build the stacked axes with :func:`stack_hw` (any
+HWParams fields may vary) and :func:`stack_traces` (same-geometry traces,
+e.g. the same workload generated at different thread counts).  Every
+``HWParams`` field may vary per sweep point.  ``LazyPIMConfig`` is passed
+unbatched (one config per :func:`run_sweep` call): its numeric fields are
+traced leaves, so *calls* with different values reuse the compiled step,
+while the static flags (``partial_commits``, ``cpuws_regs``,
+``max_rollbacks``) — like ``SignatureSpec`` geometry and trace shapes —
+select a different compiled function.
+:func:`sweep_cache_sizes` exposes the per-mechanism compile counts so the
+one-compile claim is measured, not inferred
+(``benchmarks/bench_engine.py``).
 """
 
 from __future__ import annotations
 
-from repro.core.coherence import LazyPIMConfig, simulate_lazypim
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coherence import LazyPIMConfig, _lazypim_acc, simulate_lazypim
 from repro.core.mechanisms import (
+    ACC_FNS,
     SimResult,
+    _finalize,
     simulate_cg,
     simulate_cpu_only,
     simulate_fg,
@@ -20,7 +46,7 @@ from repro.core.mechanisms import (
 )
 from repro.core.signatures import SignatureSpec
 from repro.sim.costmodel import HWParams
-from repro.sim.prep import TraceTensors, prepare
+from repro.sim.prep import TRACE_DATA_FIELDS, TraceTensors, prepare
 from repro.sim.trace import WindowTrace, make_trace
 
 MECHANISMS = ("cpu", "fg", "cg", "nc", "lazypim", "ideal")
@@ -53,6 +79,98 @@ def run_all(
 ) -> dict[str, SimResult]:
     hw = hw or HWParams()
     return {m: run_mechanism(tt, hw, m, lazy_cfg) for m in mechanisms}
+
+
+# ---------------------------------------------------------------------------
+# Single-compile sweep engine
+# ---------------------------------------------------------------------------
+
+
+def stack_hw(hws: list[HWParams]) -> HWParams:
+    """Stack a list of HWParams into one pytree with (S,)-shaped leaves.
+
+    Leaf dtypes follow the field annotations (float32 / int32), so sweeps
+    that write ``offchip_bw_gbs=16`` and ``offchip_bw_gbs=16.0`` hit the
+    same compiled function."""
+    kw = {}
+    for f in dataclasses.fields(HWParams):
+        dt = jnp.float32 if "float" in str(f.type) else jnp.int32
+        kw[f.name] = jnp.asarray([getattr(h, f.name) for h in hws], dtype=dt)
+    return HWParams(**kw)
+
+
+def stack_traces(tts: list[TraceTensors]) -> TraceTensors:
+    """Stack same-geometry TraceTensors into one pytree with a leading sweep
+    axis on every tensor leaf.
+
+    All traces must share geometry metadata (line/window/kernel counts and
+    signature spec — they select the compiled shapes); ``name``/``threads``
+    and the scalar locality constants are taken from the first trace, so
+    only stack traces whose ``cpu_priv_miss_rate``/``cpu_reuse`` agree
+    (checked) — e.g. one workload generated at several thread counts.
+    """
+    t0 = tts[0]
+    for t in tts[1:]:
+        same = (t.num_lines == t0.num_lines and t.num_windows == t0.num_windows
+                and t.num_kernels == t0.num_kernels and t.spec == t0.spec
+                and t.cpu_priv_miss_rate == t0.cpu_priv_miss_rate
+                and t.cpu_reuse == t0.cpu_reuse)
+        if not same:
+            raise ValueError(f"cannot stack {t.name}: geometry differs from {t0.name}")
+    fields = {f.name: getattr(t0, f.name) for f in dataclasses.fields(t0)}
+    for key in TRACE_DATA_FIELDS:
+        fields[key] = jnp.stack([getattr(t, key) for t in tts])
+    return TraceTensors(**fields)
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_fn(mechanism: str):
+    """One jitted, vmapped window-scan per mechanism (cached).  The jit cache
+    size of the returned function IS the sweep compile count."""
+    if mechanism == "lazypim":
+        return jax.jit(jax.vmap(_lazypim_acc, in_axes=(0, 0, None)))
+    return jax.jit(jax.vmap(ACC_FNS[mechanism], in_axes=(0, 0)))
+
+
+def sweep_cache_sizes(mechanisms: tuple[str, ...] = MECHANISMS) -> dict[str, int]:
+    """Measured XLA compile count per mechanism's sweep function (0 if the
+    sweep function has never run)."""
+    return {m: _sweep_fn(m)._cache_size() for m in mechanisms}
+
+
+def run_sweep(
+    tt: TraceTensors,
+    hw: HWParams,
+    mechanisms: tuple[str, ...] = MECHANISMS,
+    lazy_cfg: LazyPIMConfig | None = None,
+) -> list[dict[str, SimResult]]:
+    """Run every mechanism over a stacked sweep in one batched execution.
+
+    ``tt``/``hw`` carry a leading sweep axis S on every tensor leaf (from
+    :func:`stack_traces` / :func:`stack_hw`; a single trace can be tiled via
+    ``stack_traces([tt] * S)``).  Returns one ``{mechanism: SimResult}``
+    dict per sweep point — the same values, bit-for-bit, as S sequential
+    :func:`run_all` calls (differentially tested), but compiled once per
+    mechanism regardless of S.
+    """
+    if not mechanisms:
+        return []
+    lazy_cfg = lazy_cfg or LazyPIMConfig()
+    num_points = None
+    out_by_mech: dict[str, dict] = {}
+    for m in mechanisms:
+        fn = _sweep_fn(m)
+        acc = fn(tt, hw, lazy_cfg) if m == "lazypim" else fn(tt, hw)
+        acc = {k: jax.device_get(v) for k, v in acc.items()}
+        num_points = len(next(iter(acc.values())))
+        out_by_mech[m] = acc
+    points: list[dict[str, SimResult]] = []
+    for i in range(num_points):
+        points.append({
+            m: _finalize(tt, m, {k: v[i] for k, v in acc.items()})
+            for m, acc in out_by_mech.items()
+        })
+    return points
 
 
 def summarize(results: dict[str, SimResult], hw: HWParams) -> dict[str, dict]:

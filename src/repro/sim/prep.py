@@ -3,16 +3,44 @@
 The coherence engine (``repro.core.mechanisms`` / ``repro.core.coherence``)
 runs a ``lax.scan`` over partial-kernel windows.  This module prepares the
 static per-trace tensors (padded access lists, per-line H3 hash positions,
-pre-write bitmaps, unique-line counts) and the pure-jnp primitives every
-mechanism shares:
+pre-write bitmaps, unique-line counts) and the primitives every mechanism
+shares.
 
-* ``sig_bits_from_ids``     — build a (sig_bits,) Bloom image from an address list
-* ``bank_bits_from_bitmap`` — build the CPUWriteSet register bank from a dirty
-                              line bitmap (round-robin register assignment)
-* ``conflict_any``          — the paper's AND-intersection conflict prefilter
-* ``members``               — signature membership per line (with real FPs)
-* ``cpu_cache_step``        — CPU-side presence/dirty bitmap evolution
-* ``evict_to_cap``          — capacity eviction with deterministic thinning
+**Packed word layout (the hot path).**  Every per-line bitmap the simulator
+carries through the scan (``present``, ``dirty``, ``cpuws``, ``conc``,
+``read_bm``, the per-kernel ``pre_writes``) is a ``ceil(num_lines / 32)``
+array of ``uint32`` words — bit ``b`` of word ``w`` is line ``32 * w + b``
+(little-endian bit order, matching :func:`repro.core.signatures.pack_bits`).
+Bloom images (``read_bits`` / ``write_bits``, the CPUWriteSet bank) are
+``sig_bits / 32`` words with the same convention.  Pad bits past
+``num_lines`` are **always zero**; every primitive preserves that invariant
+(negation only ever appears as ``x & ~y`` against a clean bitmap).  The
+packed carry is 32× smaller than the boolean seed carry and all bitmap
+algebra (OR/AND/select/popcount) runs word-wise:
+
+* ``scatter_set``          — OR line ids into a packed bitmap (sort + dedupe +
+                             distinct-bit add ⇒ O(A log A), not O(num_lines))
+* ``gather_hits``          — per-slot membership test for an address list
+* ``sig_bits_from_ids``    — packed Bloom image of an address list
+* ``sig_bits_from_bitmap`` — packed Bloom image of a packed bitmap
+* ``bank_bits_from_bitmap``— packed CPUWriteSet register bank
+* ``conflict_any``         — paper §5.3 AND-prefilter over segment-aligned
+                             word masks
+* ``line_sig_hits``        — per-(line, segment) signature bit lookups; the
+                             shared gather behind ``members`` and
+                             ``conflict_from_hits``
+* ``members``              — packed membership mask (with real H3 FPs)
+* ``conflict_from_hits``   — ``conflict_any∘bank_bits_from_bitmap`` fused
+                             into a gather + mod-``R`` segment reduction
+                             (no scatter); bit-exact with the unfused pair
+* ``evict_to_cap``         — capacity eviction via word popcounts
+* ``cpu_cache_step``       — CPU-side presence/dirty word-bitmap evolution
+
+Each primitive keeps its boolean seed implementation as a ``*_bool``
+reference (same math on ``(num_lines,)`` bool bitmaps); the differential
+tests in ``tests/test_packed_engine.py`` assert bit-exact equality between
+the two families, and ``repro.core._boolref`` runs the full seed simulators
+on the ``*_bool`` path.
 
 Everything is bit-exact with :mod:`repro.core.signatures` (same H3 matrices);
 the simulator's false positives are *actual* hash collisions.
@@ -34,16 +62,43 @@ from repro.sim.trace import WindowTrace
 
 CPUWS_REGS = 16  # CPUWriteSet bank registers (paper §5.7)
 
+# Multiplicative-hash constants shared by the deterministic per-(line, window)
+# thinning hashes (capacity eviction in :func:`evict_to_cap`, PIM-DBI drain in
+# ``repro.core.coherence``).  Named once so the two sites cannot drift.
+KNUTH_MULT = np.uint32(2654435761)   # 2**32 / golden ratio (Knuth §6.4)
+KNUTH_STEP = np.uint32(40503)        # Knuth's 16-bit multiplicative constant
+XXH_PRIME2 = np.uint32(2246822519)   # xxHash32 PRIME32_2
+XXH_PRIME5 = np.uint32(374761393)    # xxHash32 PRIME32_5
+
+
+def line_window_u01(
+    num_lines: int, window_idx: jax.Array, mult: np.uint32, step: np.uint32
+) -> jax.Array:
+    """Deterministic per-(line, window) uniform in [0, 1): a multiplicative
+    hash of the line id stepped by the window index, top 16 bits scaled.
+    Both thinning sites (eviction, DBI drain) share this kernel with their
+    own (mult, step) constants."""
+    h = (jnp.arange(num_lines, dtype=jnp.uint32) * mult
+         + window_idx.astype(jnp.uint32) * step)
+    return ((h >> np.uint32(16)) & np.uint32(0xFFFF)).astype(jnp.float32) / 65536.0
+
+
+# Static metadata vs tensor leaves of TraceTensors — the single source of
+# truth for both the pytree registration and engine.stack_traces.
+TRACE_META_FIELDS = ("name", "threads", "num_lines", "num_windows",
+                     "num_kernels", "spec", "cpu_priv_miss_rate", "cpu_reuse")
+TRACE_DATA_FIELDS = ("line_pos", "line_reg", "pim_reads", "pim_writes",
+                     "cpu_reads", "cpu_writes", "pim_r_valid", "pim_w_valid",
+                     "cpu_r_valid", "cpu_w_valid", "kernel_id", "kernel_start",
+                     "kernel_end", "pre_writes", "pre_writes_words",
+                     "pim_instr", "cpu_instr", "cpu_priv", "pim_uniq_r",
+                     "pim_uniq_w", "pim_uniq")
+
 
 @functools.partial(
     jax.tree_util.register_dataclass,
-    meta_fields=("name", "threads", "num_lines", "num_windows", "num_kernels",
-                 "spec", "cpu_priv_miss_rate", "cpu_reuse"),
-    data_fields=("line_pos", "line_reg", "pim_reads", "pim_writes", "cpu_reads",
-                 "cpu_writes", "pim_r_valid", "pim_w_valid", "cpu_r_valid",
-                 "cpu_w_valid", "kernel_id", "kernel_start", "kernel_end",
-                 "pre_writes", "pim_instr", "cpu_instr", "cpu_priv",
-                 "pim_uniq_r", "pim_uniq_w", "pim_uniq"),
+    meta_fields=TRACE_META_FIELDS,
+    data_fields=TRACE_DATA_FIELDS,
 )
 @dataclasses.dataclass(frozen=True)
 class TraceTensors:
@@ -75,7 +130,8 @@ class TraceTensors:
     kernel_id: jax.Array     # (W,) int32
     kernel_start: jax.Array  # (W,) bool
     kernel_end: jax.Array    # (W,) bool
-    pre_writes: jax.Array    # (K, num_lines) bool
+    pre_writes: jax.Array    # (K, num_lines) bool (boolean reference path)
+    pre_writes_words: jax.Array  # (K, ceil(num_lines/32)) uint32 (packed path)
 
     # Work counts
     pim_instr: jax.Array     # (W,) f32
@@ -97,8 +153,419 @@ class TraceTensors:
     def num_segments(self) -> int:
         return self.spec.num_segments
 
+    @property
+    def num_line_words(self) -> int:
+        """Packed line-bitmap width: ceil(num_lines / 32) uint32 words."""
+        return (self.num_lines + 31) // 32
 
-def _uniq_count(rows: np.ndarray) -> np.ndarray:
+    @property
+    def sig_words(self) -> int:
+        """Packed Bloom-image width: sig_bits / 32 uint32 words."""
+        return self.spec.num_words
+
+
+# ---------------------------------------------------------------------------
+# Packed bitmap core (uint32 words, little-endian bit order, zero pad bits)
+# ---------------------------------------------------------------------------
+
+
+def packed_words(nbits: int) -> int:
+    return (nbits + 31) // 32
+
+
+def pack_bitmap(bits: jax.Array) -> jax.Array:
+    """(n,) bool -> (ceil(n/32),) uint32.  Pad bits are zero."""
+    n = bits.shape[0]
+    pad = (-n) % 32
+    b = jnp.pad(bits, (0, pad)).reshape(-1, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(b << shifts[None, :], axis=1, dtype=jnp.uint32)
+
+
+def unpack_bitmap(words: jax.Array, nbits: int) -> jax.Array:
+    """(..., nw) uint32 -> (..., nbits) bool."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & np.uint32(1)
+    return bits.reshape(*words.shape[:-1], -1)[..., :nbits].astype(bool)
+
+
+def popcount_words(words: jax.Array) -> jax.Array:
+    """Total set-bit count of a packed bitmap (SWAR popcount, int32 scalar)."""
+    w = words
+    w = w - ((w >> np.uint32(1)) & np.uint32(0x55555555))
+    w = (w & np.uint32(0x33333333)) + ((w >> np.uint32(2)) & np.uint32(0x33333333))
+    w = (w + (w >> np.uint32(4))) & np.uint32(0x0F0F0F0F)
+    per_word = (w * np.uint32(0x01010101)) >> np.uint32(24)
+    return jnp.sum(per_word.astype(jnp.int32))
+
+
+def scatter_set(
+    words: jax.Array,
+    ids: jax.Array,
+    valid: jax.Array | None,
+    nbits: int,
+) -> jax.Array:
+    """OR the valid line ids of ``ids`` into a packed bitmap.
+
+    O(A log A) in the id-list length: sort the ids, keep the first of each
+    duplicate run, then scatter-*add* single-bit masks — after dedup every
+    surviving update targets a distinct bit, so integer add is exactly OR
+    (no carries).  The seed path (:func:`scatter_set_bool`) instead memsets
+    and scatters an O(num_lines) boolean staging array per call.
+    """
+    ids = ids.reshape(-1)
+    if valid is None:
+        p = ids
+    else:
+        p = jnp.where(valid.reshape(-1), ids, nbits)
+    p = jnp.sort(p)
+    fresh = jnp.concatenate([jnp.ones((1,), bool), p[1:] != p[:-1]])
+    # Negative ids (the repo-wide -1 padding sentinel) must be dropped here,
+    # not wrapped: a negative scatter index would land in the last word.
+    keep = fresh & (p >= 0) & (p < nbits)
+    word = jnp.where(keep, p >> 5, words.shape[0])
+    mask = jnp.where(keep, jnp.uint32(1) << (p & 31).astype(jnp.uint32),
+                     jnp.uint32(0))
+    delta = jnp.zeros_like(words).at[word].add(mask, mode="drop")
+    return words | delta
+
+
+def gather_hits(words: jax.Array, ids: jax.Array, valid: jax.Array) -> jax.Array:
+    """Per-slot hit flags: valid & line present (packed lookup)."""
+    idx = jnp.clip(ids, 0, words.shape[0] * 32 - 1)
+    w = words[idx >> 5]
+    return valid & (((w >> (idx & 31).astype(jnp.uint32)) & 1) != 0)
+
+
+# ---------------------------------------------------------------------------
+# Signature primitives over line-id tensors (bit-exact with core.signatures)
+# ---------------------------------------------------------------------------
+
+
+def sig_bits_from_ids(
+    tt: TraceTensors, ids: jax.Array, valid: jax.Array
+) -> jax.Array:
+    """Packed Bloom image (sig_words,) uint32 of the valid line ids (A,)."""
+    pos = tt.line_pos[jnp.clip(ids, 0, tt.num_lines - 1)]  # (A, M)
+    pos = jnp.where(valid[:, None], pos, tt.sig_bits)
+    return scatter_set(jnp.zeros((tt.sig_words,), jnp.uint32),
+                       pos.reshape(-1), None, tt.sig_bits)
+
+
+def sig_bits_from_bitmap(tt: TraceTensors, words: jax.Array) -> jax.Array:
+    """Packed Bloom image (sig_words,) uint32 of all lines set in a packed
+    bitmap.  Inherently O(num_lines · M): every set line contributes its M
+    static hash positions."""
+    bitmap = unpack_bitmap(words, tt.num_lines)
+    return pack_bitmap(_sig_image_bool(tt, bitmap))
+
+
+def bank_bits_from_bitmap(
+    tt: TraceTensors, words: jax.Array, num_regs: int = CPUWS_REGS
+) -> jax.Array:
+    """Packed CPUWriteSet bank (num_regs, sig_words) uint32 from a packed
+    dirty-line bitmap.  Register assignment is line_id % num_regs — the
+    deterministic equivalent of the paper's round-robin pointer for
+    set-valued (unordered) insertion.  The simulators use the fused
+    :func:`conflict_from_hits` instead of materializing the bank."""
+    bitmap = unpack_bitmap(words, tt.num_lines)
+    bank = _bank_image_bool(tt, bitmap, num_regs)
+    return jax.vmap(pack_bitmap)(bank)
+
+
+def conflict_any(tt: TraceTensors, read_words: jax.Array, bank_words: jax.Array) -> jax.Array:
+    """Paper §5.3/§5.5 conflict prefilter: True iff the PIMReadSet intersects
+    ANY CPUWriteSet register with every segment non-empty.  Segments are
+    word-aligned (sig_bits is a multiple of 32 · num_segments), so the test
+    is word-mask algebra."""
+    inter = bank_words & read_words[None, :]  # (R, sig_words)
+    seg = inter.reshape(bank_words.shape[0], tt.num_segments, -1)
+    return jnp.any(jnp.all(jnp.any(seg != 0, axis=2), axis=1))
+
+
+def line_sig_hits(tt: TraceTensors, sig_words: jax.Array) -> jax.Array:
+    """Per-(line, segment) signature bit lookups -> (num_lines, M) bool.
+
+    One gather from the packed image serves every consumer in a simulator
+    step: ``members`` is the all-segments AND, ``conflict_from_hits`` the
+    per-register segment OR — so the packed LazyPIM step gathers each image
+    once instead of once per membership/bank call."""
+    pos = tt.line_pos  # (n, M) int32 global positions, segment m in column m
+    w = sig_words[pos >> 5]
+    return ((w >> (pos & 31).astype(jnp.uint32)) & 1) != 0
+
+
+def members(tt: TraceTensors, words: jax.Array, sig_words: jax.Array) -> jax.Array:
+    """Packed per-line signature membership mask for lines set in ``words``.
+    Includes the signature's real false positives."""
+    return words & pack_bitmap(jnp.all(line_sig_hits(tt, sig_words), axis=1))
+
+
+def members_from_hits(words: jax.Array, hits: jax.Array) -> jax.Array:
+    """``members`` given a precomputed :func:`line_sig_hits` gather."""
+    return words & pack_bitmap(jnp.all(hits, axis=1))
+
+
+def conflict_from_hits(
+    tt: TraceTensors,
+    words: jax.Array,
+    hits: jax.Array,
+    num_regs: int = CPUWS_REGS,
+) -> jax.Array:
+    """``conflict_any(tt, sig, bank_bits_from_bitmap(tt, words))`` without
+    building the bank: segment ``m`` of register ``r``'s intersection with
+    the read image is non-empty iff some line ``i ≡ r (mod num_regs)`` set
+    in ``words`` has its segment-``m`` hash bit set in the image — each
+    line's M positions land in M distinct segments, so the bank scatter
+    collapses to a gather (``hits``) plus a mod-``num_regs`` any-reduction.
+    Bit-exact with the unfused pair (differentially tested)."""
+    n = tt.num_lines
+    masked = hits & unpack_bitmap(words, n)[:, None]
+    pad = (-n) % num_regs
+    masked = jnp.pad(masked, ((0, pad), (0, 0)))
+    seg_any = jnp.any(masked.reshape(-1, num_regs, tt.num_segments), axis=0)
+    return jnp.any(jnp.all(seg_any, axis=1))
+
+
+def ids_member(
+    tt: TraceTensors, ids: jax.Array, valid: jax.Array, sig_words: jax.Array
+) -> jax.Array:
+    """Signature membership for an address list (A,) -> (A,) bool."""
+    pos = tt.line_pos[jnp.clip(ids, 0, tt.num_lines - 1)]
+    w = sig_words[pos >> 5]
+    hit = ((w >> (pos & 31).astype(jnp.uint32)) & 1) != 0
+    return valid & jnp.all(hit, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# CPU cache bitmap evolution (packed)
+# ---------------------------------------------------------------------------
+
+
+def evict_to_cap(
+    present: jax.Array,
+    dirty: jax.Array,
+    window_idx: jax.Array,
+    cap,
+    nbits: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Capacity model: thin the packed presence bitmap down to ~cap lines
+    using the deterministic per-(line, window) hash.  Evicted dirty lines are
+    written back (returned as a count).  No-op when under cap."""
+    count = popcount_words(present)
+    over = count > cap
+    keep_prob = jnp.clip(cap / jnp.maximum(count, 1), 0.0, 1.0)
+    u = line_window_u01(nbits, window_idx, KNUTH_MULT, KNUTH_STEP)
+    over_mask = jnp.where(over, np.uint32(0xFFFFFFFF), np.uint32(0))
+    drop = present & pack_bitmap(u > keep_prob) & over_mask
+    wb_lines = popcount_words(dirty & drop).astype(jnp.float32)
+    return present & ~drop, dirty & ~drop, wb_lines
+
+
+@dataclasses.dataclass
+class CpuStepOut:
+    present: jax.Array
+    dirty: jax.Array
+    hits: jax.Array        # scalar f32
+    misses: jax.Array      # scalar f32
+    wb_lines: jax.Array    # capacity writebacks, f32
+    mem_ns: jax.Array      # CPU-side memory latency for this window
+    fill_bytes: jax.Array  # off-chip fill traffic (miss fills)
+
+
+def cpu_cache_step(
+    tt: TraceTensors,
+    hw: HWParams,
+    present: jax.Array,
+    dirty: jax.Array,
+    w: jax.Array,
+    *,
+    cacheable: bool = True,
+    cap_lines=None,
+) -> CpuStepOut:
+    """One window of CPU-thread accesses to the PIM data region, on packed
+    word bitmaps.
+
+    ``cacheable=False`` models NC: every access is an off-chip DRAM access,
+    and the presence/dirty bitmaps stay empty.
+    """
+    cr, crv = tt.cpu_reads[w], tt.cpu_r_valid[w]
+    cw, cwv = tt.cpu_writes[w], tt.cpu_w_valid[w]
+    n_acc = (jnp.sum(crv) + jnp.sum(cwv)).astype(jnp.float32)
+    reuse = tt.cpu_reuse
+    miss_ns = hw.offchip_mem_ns / hw.cpu_mlp  # OoO overlaps misses
+
+    if not cacheable:
+        # NC: every dynamic access (first touch AND repeats) goes to DRAM.
+        n_dyn = n_acc * reuse
+        mem_ns = n_dyn * miss_ns / hw.cpu_cores
+        fill = n_dyn * hw.nc_bytes
+        zero = jnp.zeros((), jnp.float32)
+        return CpuStepOut(present, dirty, zero, n_dyn, zero, mem_ns, fill)
+
+    r_hit = gather_hits(present, cr, crv)
+    w_hit = gather_hits(present, cw, cwv)
+    misses = (jnp.sum(crv & ~r_hit) + jnp.sum(cwv & ~w_hit)).astype(jnp.float32)
+    hits = (jnp.sum(r_hit) + jnp.sum(w_hit)).astype(jnp.float32)
+    present = scatter_set(present, cr, crv, tt.num_lines)
+    present = scatter_set(present, cw, cwv, tt.num_lines)
+    dirty = scatter_set(dirty, cw, cwv, tt.num_lines)
+    cap = cap_lines if cap_lines is not None else hw.thread_cache_cap
+    present, dirty, wb = evict_to_cap(present, dirty, w, cap, tt.num_lines)
+    # first touches: L2 hit or off-chip miss; repeats: L1 hits.
+    repeats_ns = n_acc * (reuse - 1.0) * hw.l1_hit_ns
+    mem_ns = (hits * hw.l2_hit_ns + misses * miss_ns + repeats_ns) / hw.cpu_cores
+    fill = (misses + wb) * LINE_BYTES
+    return CpuStepOut(present, dirty, hits, misses, wb, mem_ns, fill)
+
+
+# ---------------------------------------------------------------------------
+# Boolean seed reference path (*_bool): same math on (num_lines,) bool
+# bitmaps.  Kept verbatim for the differential tests (packed vs boolean
+# SimResult equality) and as the readable specification of each primitive.
+# ---------------------------------------------------------------------------
+
+
+def _sig_image_bool(tt: TraceTensors, bitmap: jax.Array) -> jax.Array:
+    pos = jnp.where(bitmap[:, None], tt.line_pos, tt.sig_bits)  # (n, M)
+    staged = jnp.zeros((tt.sig_bits + 1,), dtype=bool)
+    staged = staged.at[pos.reshape(-1)].set(True, mode="drop")
+    return staged[: tt.sig_bits]
+
+
+def _bank_image_bool(
+    tt: TraceTensors, bitmap: jax.Array, num_regs: int
+) -> jax.Array:
+    stride = tt.sig_bits + 1
+    pos = jnp.where(bitmap[:, None], tt.line_pos, tt.sig_bits)  # (n, M)
+    flat = tt.line_reg[:, None] * stride + pos  # (n, M)
+    staged = jnp.zeros((num_regs * stride,), dtype=bool)
+    staged = staged.at[flat.reshape(-1)].set(True, mode="drop")
+    return staged.reshape(num_regs, stride)[:, : tt.sig_bits]
+
+
+def sig_bits_from_ids_bool(
+    tt: TraceTensors, ids: jax.Array, valid: jax.Array
+) -> jax.Array:
+    """Bloom image (sig_bits,) bool of the valid line ids in ``ids`` (A,)."""
+    pos = tt.line_pos[jnp.clip(ids, 0, tt.num_lines - 1)]  # (A, M)
+    pos = jnp.where(valid[:, None], pos, tt.sig_bits)
+    staged = jnp.zeros((tt.sig_bits + 1,), dtype=bool)
+    staged = staged.at[pos.reshape(-1)].set(True, mode="drop")
+    return staged[: tt.sig_bits]
+
+
+def sig_bits_from_bitmap_bool(tt: TraceTensors, bitmap: jax.Array) -> jax.Array:
+    """Bloom image (sig_bits,) bool of all lines set in ``bitmap`` (n,) bool."""
+    return _sig_image_bool(tt, bitmap)
+
+
+def bank_bits_from_bitmap_bool(
+    tt: TraceTensors, bitmap: jax.Array, num_regs: int = CPUWS_REGS
+) -> jax.Array:
+    """CPUWriteSet bank (num_regs, sig_bits) bool from a dirty-line bitmap."""
+    return _bank_image_bool(tt, bitmap, num_regs)
+
+
+def conflict_any_bool(
+    tt: TraceTensors, read_bits: jax.Array, bank_bits: jax.Array
+) -> jax.Array:
+    """Boolean-image conflict prefilter (seed reference)."""
+    inter = bank_bits & read_bits[None, :]  # (R, sig_bits)
+    seg = inter.reshape(bank_bits.shape[0], tt.num_segments, -1)
+    return jnp.any(jnp.all(jnp.any(seg, axis=2), axis=1))
+
+
+def members_bool(tt: TraceTensors, bitmap: jax.Array, bits: jax.Array) -> jax.Array:
+    """Per-line signature membership (n,) bool for lines set in ``bitmap``."""
+    looked = bits[tt.line_pos]  # (n, M)
+    return bitmap & jnp.all(looked, axis=1)
+
+
+def ids_member_bool(
+    tt: TraceTensors, ids: jax.Array, valid: jax.Array, bits: jax.Array
+) -> jax.Array:
+    """Signature membership for an address list against a boolean image."""
+    pos = tt.line_pos[jnp.clip(ids, 0, tt.num_lines - 1)]
+    return valid & jnp.all(bits[pos], axis=1)
+
+
+def scatter_set_bool(bitmap: jax.Array, ids: jax.Array, valid: jax.Array) -> jax.Array:
+    """OR line ids into a boolean bitmap.  Invalid slots are redirected to
+    the (out-of-bounds) index ``n`` and dropped by the scatter itself."""
+    idx = jnp.where(valid, ids, bitmap.shape[0])
+    return bitmap.at[idx].set(True, mode="drop")
+
+
+def gather_hits_bool(bitmap: jax.Array, ids: jax.Array, valid: jax.Array) -> jax.Array:
+    """Per-slot hit flags: valid & line present."""
+    present = bitmap[jnp.clip(ids, 0, bitmap.shape[0] - 1)]
+    return valid & present
+
+
+def evict_to_cap_bool(
+    present: jax.Array,
+    dirty: jax.Array,
+    window_idx: jax.Array,
+    cap,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Boolean-bitmap capacity eviction (seed reference)."""
+    n = present.shape[0]
+    count = jnp.sum(present)
+    over = count > cap
+    keep_prob = jnp.clip(cap / jnp.maximum(count, 1), 0.0, 1.0)
+    u = line_window_u01(n, window_idx, KNUTH_MULT, KNUTH_STEP)
+    drop = present & (u > keep_prob) & over
+    wb_lines = jnp.sum(dirty & drop).astype(jnp.float32)
+    return present & ~drop, dirty & ~drop, wb_lines
+
+
+def cpu_cache_step_bool(
+    tt: TraceTensors,
+    hw: HWParams,
+    present: jax.Array,
+    dirty: jax.Array,
+    w: jax.Array,
+    *,
+    cacheable: bool = True,
+    cap_lines=None,
+) -> CpuStepOut:
+    """Boolean-bitmap CPU cache step (seed reference)."""
+    cr, crv = tt.cpu_reads[w], tt.cpu_r_valid[w]
+    cw, cwv = tt.cpu_writes[w], tt.cpu_w_valid[w]
+    n_acc = (jnp.sum(crv) + jnp.sum(cwv)).astype(jnp.float32)
+    reuse = tt.cpu_reuse
+    miss_ns = hw.offchip_mem_ns / hw.cpu_mlp
+
+    if not cacheable:
+        n_dyn = n_acc * reuse
+        mem_ns = n_dyn * miss_ns / hw.cpu_cores
+        fill = n_dyn * hw.nc_bytes
+        zero = jnp.zeros((), jnp.float32)
+        return CpuStepOut(present, dirty, zero, n_dyn, zero, mem_ns, fill)
+
+    r_hit = gather_hits_bool(present, cr, crv)
+    w_hit = gather_hits_bool(present, cw, cwv)
+    misses = (jnp.sum(crv & ~r_hit) + jnp.sum(cwv & ~w_hit)).astype(jnp.float32)
+    hits = (jnp.sum(r_hit) + jnp.sum(w_hit)).astype(jnp.float32)
+    present = scatter_set_bool(present, cr, crv)
+    present = scatter_set_bool(present, cw, cwv)
+    dirty = scatter_set_bool(dirty, cw, cwv)
+    cap = cap_lines if cap_lines is not None else hw.thread_cache_cap
+    present, dirty, wb = evict_to_cap_bool(present, dirty, w, cap)
+    repeats_ns = n_acc * (reuse - 1.0) * hw.l1_hit_ns
+    mem_ns = (hits * hw.l2_hit_ns + misses * miss_ns + repeats_ns) / hw.cpu_cores
+    fill = (misses + wb) * LINE_BYTES
+    return CpuStepOut(present, dirty, hits, misses, wb, mem_ns, fill)
+
+
+# ---------------------------------------------------------------------------
+# Trace staging
+# ---------------------------------------------------------------------------
+
+
+def _uniq_count_loop(rows: np.ndarray) -> np.ndarray:
+    """Per-row unique-count, reference Python loop (seed implementation)."""
     out = np.empty((rows.shape[0],), dtype=np.float32)
     for i, row in enumerate(rows):
         v = row[row >= 0]
@@ -106,13 +573,46 @@ def _uniq_count(rows: np.ndarray) -> np.ndarray:
     return out
 
 
-def _uniq_union_count(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+def _uniq_union_count_loop(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Per-row unique-union-count, reference Python loop (seed)."""
     out = np.empty((a.shape[0],), dtype=np.float32)
     for i in range(a.shape[0]):
         va = a[i][a[i] >= 0]
         vb = b[i][b[i] >= 0]
         out[i] = len(np.unique(np.concatenate([va, vb])))
     return out
+
+
+def _uniq_count(rows: np.ndarray) -> np.ndarray:
+    """Vectorized per-row unique-count of the non-negative entries.
+
+    Row-wise sort pushes the −1 padding to the front; an entry counts iff it
+    is valid and differs from its left neighbor (the first valid entry in a
+    row always differs from −1).  Equal to :func:`_uniq_count_loop` without
+    the O(W) interpreter round-trips at trace-prep time."""
+    s = np.sort(rows, axis=1)
+    valid = s >= 0
+    first = np.empty_like(valid)
+    first[:, :1] = valid[:, :1]
+    first[:, 1:] = valid[:, 1:] & (s[:, 1:] != s[:, :-1])
+    return first.sum(axis=1).astype(np.float32)
+
+
+def _uniq_union_count(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Vectorized per-row unique-count of the union of two padded id lists."""
+    return _uniq_count(np.concatenate([a, b], axis=1))
+
+
+def _pack_rows_np(bits: np.ndarray) -> np.ndarray:
+    """(..., n) bool -> (..., ceil(n/32)) uint32, same bit order as
+    :func:`pack_bitmap` (numpy, prepare-time)."""
+    n = bits.shape[-1]
+    pad = (-n) % 32
+    if pad:
+        widths = [(0, 0)] * (bits.ndim - 1) + [(0, pad)]
+        bits = np.pad(bits, widths)
+    b = bits.reshape(*bits.shape[:-1], -1, 32).astype(np.uint32)
+    return (b << np.arange(32, dtype=np.uint32)).sum(-1, dtype=np.uint64).astype(np.uint32)
 
 
 def prepare(trace: WindowTrace, spec: SignatureSpec | None = None) -> TraceTensors:
@@ -153,6 +653,7 @@ def prepare(trace: WindowTrace, spec: SignatureSpec | None = None) -> TraceTenso
         kernel_start=dev(trace.kernel_start, jnp.bool_),
         kernel_end=dev(trace.kernel_end, jnp.bool_),
         pre_writes=dev(trace.pre_writes, jnp.bool_),
+        pre_writes_words=dev(_pack_rows_np(trace.pre_writes), jnp.uint32),
         pim_instr=dev(trace.pim_instr, jnp.float32),
         cpu_instr=dev(trace.cpu_instr, jnp.float32),
         cpu_priv=dev(trace.cpu_priv_accesses, jnp.float32),
@@ -162,161 +663,3 @@ def prepare(trace: WindowTrace, spec: SignatureSpec | None = None) -> TraceTenso
         pim_uniq_w=dev(_uniq_count(trace.pim_writes), jnp.float32),
         pim_uniq=dev(_uniq_union_count(trace.pim_reads, trace.pim_writes), jnp.float32),
     )
-
-
-# ---------------------------------------------------------------------------
-# Signature primitives over line-id tensors (bit-exact with core.signatures)
-# ---------------------------------------------------------------------------
-
-
-def sig_bits_from_ids(
-    tt: TraceTensors, ids: jax.Array, valid: jax.Array
-) -> jax.Array:
-    """Bloom image (sig_bits,) bool of the valid line ids in ``ids`` (A,)."""
-    pos = tt.line_pos[jnp.clip(ids, 0, tt.num_lines - 1)]  # (A, M)
-    pos = jnp.where(valid[:, None], pos, tt.sig_bits)
-    staged = jnp.zeros((tt.sig_bits + 1,), dtype=bool)
-    staged = staged.at[pos.reshape(-1)].set(True, mode="drop")
-    return staged[: tt.sig_bits]
-
-
-def sig_bits_from_bitmap(tt: TraceTensors, bitmap: jax.Array) -> jax.Array:
-    """Bloom image (sig_bits,) bool of all lines set in ``bitmap`` (n,) bool."""
-    pos = jnp.where(bitmap[:, None], tt.line_pos, tt.sig_bits)  # (n, M)
-    staged = jnp.zeros((tt.sig_bits + 1,), dtype=bool)
-    staged = staged.at[pos.reshape(-1)].set(True, mode="drop")
-    return staged[: tt.sig_bits]
-
-
-def bank_bits_from_bitmap(
-    tt: TraceTensors, bitmap: jax.Array, num_regs: int = CPUWS_REGS
-) -> jax.Array:
-    """CPUWriteSet bank (num_regs, sig_bits) bool from a dirty-line bitmap.
-
-    Register assignment is line_id % num_regs — the deterministic equivalent
-    of the paper's round-robin pointer for set-valued (unordered) insertion.
-    """
-    stride = tt.sig_bits + 1
-    pos = jnp.where(bitmap[:, None], tt.line_pos, tt.sig_bits)  # (n, M)
-    flat = tt.line_reg[:, None] * stride + pos  # (n, M)
-    staged = jnp.zeros((num_regs * stride,), dtype=bool)
-    staged = staged.at[flat.reshape(-1)].set(True, mode="drop")
-    return staged.reshape(num_regs, stride)[:, : tt.sig_bits]
-
-
-def conflict_any(tt: TraceTensors, read_bits: jax.Array, bank_bits: jax.Array) -> jax.Array:
-    """Paper §5.3/§5.5 conflict prefilter: True iff the PIMReadSet intersects
-    ANY CPUWriteSet register with every segment non-empty."""
-    inter = bank_bits & read_bits[None, :]  # (R, sig_bits)
-    seg = inter.reshape(bank_bits.shape[0], tt.num_segments, -1)
-    return jnp.any(jnp.all(jnp.any(seg, axis=2), axis=1))
-
-
-def members(tt: TraceTensors, bitmap: jax.Array, bits: jax.Array) -> jax.Array:
-    """Per-line signature membership (n,) bool for lines set in ``bitmap``.
-    Includes the signature's real false positives."""
-    looked = bits[tt.line_pos]  # (n, M)
-    return bitmap & jnp.all(looked, axis=1)
-
-
-def ids_member(
-    tt: TraceTensors, ids: jax.Array, valid: jax.Array, bits: jax.Array
-) -> jax.Array:
-    """Signature membership for an address list (A,) -> (A,) bool."""
-    pos = tt.line_pos[jnp.clip(ids, 0, tt.num_lines - 1)]
-    return valid & jnp.all(bits[pos], axis=1)
-
-
-# ---------------------------------------------------------------------------
-# CPU cache bitmap evolution
-# ---------------------------------------------------------------------------
-
-
-def scatter_set(bitmap: jax.Array, ids: jax.Array, valid: jax.Array) -> jax.Array:
-    idx = jnp.where(valid, ids, bitmap.shape[0])
-    big = jnp.concatenate([bitmap, jnp.zeros((1,), bitmap.dtype)])
-    big = big.at[idx].set(True, mode="drop")
-    return big[:-1]
-
-
-def gather_hits(bitmap: jax.Array, ids: jax.Array, valid: jax.Array) -> jax.Array:
-    """Per-slot hit flags: valid & line present."""
-    present = bitmap[jnp.clip(ids, 0, bitmap.shape[0] - 1)]
-    return valid & present
-
-
-def evict_to_cap(
-    present: jax.Array,
-    dirty: jax.Array,
-    window_idx: jax.Array,
-    cap: int,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Capacity model: thin the presence bitmap down to ~cap lines using a
-    deterministic per-(line, window) hash.  Evicted dirty lines are written
-    back (returned as a count).  No-op when under cap."""
-    n = present.shape[0]
-    count = jnp.sum(present)
-    over = count > cap
-    keep_prob = jnp.clip(cap / jnp.maximum(count, 1), 0.0, 1.0)
-    h = (jnp.arange(n, dtype=jnp.uint32) * np.uint32(2654435761)
-         + window_idx.astype(jnp.uint32) * np.uint32(40503))
-    u = ((h >> np.uint32(16)) & np.uint32(0xFFFF)).astype(jnp.float32) / 65536.0
-    drop = present & (u > keep_prob) & over
-    wb_lines = jnp.sum(dirty & drop).astype(jnp.float32)
-    return present & ~drop, dirty & ~drop, wb_lines
-
-
-@dataclasses.dataclass
-class CpuStepOut:
-    present: jax.Array
-    dirty: jax.Array
-    hits: jax.Array        # scalar f32
-    misses: jax.Array      # scalar f32
-    wb_lines: jax.Array    # capacity writebacks, f32
-    mem_ns: jax.Array      # CPU-side memory latency for this window
-    fill_bytes: jax.Array  # off-chip fill traffic (miss fills)
-
-
-def cpu_cache_step(
-    tt: TraceTensors,
-    hw: HWParams,
-    present: jax.Array,
-    dirty: jax.Array,
-    w: jax.Array,
-    *,
-    cacheable: bool = True,
-    cap_lines: int | None = None,
-) -> CpuStepOut:
-    """One window of CPU-thread accesses to the PIM data region.
-
-    ``cacheable=False`` models NC: every access is an off-chip DRAM access,
-    and the presence/dirty bitmaps stay empty.
-    """
-    cr, crv = tt.cpu_reads[w], tt.cpu_r_valid[w]
-    cw, cwv = tt.cpu_writes[w], tt.cpu_w_valid[w]
-    n_acc = (jnp.sum(crv) + jnp.sum(cwv)).astype(jnp.float32)
-    reuse = tt.cpu_reuse
-    miss_ns = hw.offchip_mem_ns / hw.cpu_mlp  # OoO overlaps misses
-
-    if not cacheable:
-        # NC: every dynamic access (first touch AND repeats) goes to DRAM.
-        n_dyn = n_acc * reuse
-        mem_ns = n_dyn * miss_ns / hw.cpu_cores
-        fill = n_dyn * hw.nc_bytes
-        zero = jnp.zeros((), jnp.float32)
-        return CpuStepOut(present, dirty, zero, n_dyn, zero, mem_ns, fill)
-
-    r_hit = gather_hits(present, cr, crv)
-    w_hit = gather_hits(present, cw, cwv)
-    misses = (jnp.sum(crv & ~r_hit) + jnp.sum(cwv & ~w_hit)).astype(jnp.float32)
-    hits = (jnp.sum(r_hit) + jnp.sum(w_hit)).astype(jnp.float32)
-    present = scatter_set(present, cr, crv)
-    present = scatter_set(present, cw, cwv)
-    dirty = scatter_set(dirty, cw, cwv)
-    cap = cap_lines if cap_lines is not None else hw.thread_cache_cap
-    present, dirty, wb = evict_to_cap(present, dirty, w, cap)
-    # first touches: L2 hit or off-chip miss; repeats: L1 hits.
-    repeats_ns = n_acc * (reuse - 1.0) * hw.l1_hit_ns
-    mem_ns = (hits * hw.l2_hit_ns + misses * miss_ns + repeats_ns) / hw.cpu_cores
-    fill = (misses + wb) * LINE_BYTES
-    return CpuStepOut(present, dirty, hits, misses, wb, mem_ns, fill)

@@ -14,8 +14,8 @@ from repro.core import signatures as sig
 from repro.core.coherence import LazyPIMConfig, simulate_lazypim
 from repro.core.mechanisms import simulate_ideal
 from repro.sim.costmodel import HWParams
-from repro.sim.prep import (bank_bits_from_bitmap, conflict_any, members,
-                            prepare, sig_bits_from_ids)
+from repro.sim.prep import (bank_bits_from_bitmap_bool, conflict_any_bool,
+                            members_bool, prepare, sig_bits_from_ids_bool)
 from repro.sim.trace import make_graph_trace, make_htap_trace
 
 HW = HWParams()
@@ -69,10 +69,10 @@ def test_conflict_detection_no_false_negatives_trace_level(seed):
     shared = set(reads[rv]) & set(cw[cv])
     bm = np.zeros((tt.num_lines,), bool)
     bm[cw[cv]] = True
-    bank = bank_bits_from_bitmap(tt, jnp.asarray(bm))
-    rbits = sig_bits_from_ids(tt, tt.pim_reads[w], tt.pim_r_valid[w])
+    bank = bank_bits_from_bitmap_bool(tt, jnp.asarray(bm))
+    rbits = sig_bits_from_ids_bool(tt, tt.pim_reads[w], tt.pim_r_valid[w])
     if shared:
-        assert bool(conflict_any(tt, rbits, bank))
+        assert bool(conflict_any_bool(tt, rbits, bank))
 
 
 def test_lazypim_never_slower_than_serialized_bound():
@@ -98,6 +98,6 @@ def test_members_subset_of_bitmap(k):
     tt = prepare(tr)
     rng = np.random.default_rng(k)
     bm = jnp.asarray(rng.random(tt.num_lines) < 0.01)
-    bits = sig_bits_from_ids(tt, tt.pim_reads[0], tt.pim_r_valid[0])
-    m = members(tt, bm, bits)
+    bits = sig_bits_from_ids_bool(tt, tt.pim_reads[0], tt.pim_r_valid[0])
+    m = members_bool(tt, bm, bits)
     assert bool(jnp.all(~m | bm))

@@ -1,0 +1,246 @@
+"""Differential tests: packed uint32-word engine vs the boolean seed path.
+
+The packed primitives in ``repro.sim.prep`` and the packed simulators in
+``repro.core.mechanisms`` / ``repro.core.coherence`` must be *bit-exact*
+with the ``*_bool`` seed references (``repro.core._boolref``): same
+bitmaps, same Bloom images, same conflict decisions, and identical
+``SimResult`` accumulators — every field, not just ``time_ns``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import _boolref
+from repro.core.coherence import LazyPIMConfig, simulate_lazypim
+from repro.sim import prep as P
+from repro.sim.costmodel import HWParams
+from repro.sim.engine import (
+    run_all,
+    run_sweep,
+    stack_hw,
+    stack_traces,
+    sweep_cache_sizes,
+)
+from repro.sim.prep import prepare
+from repro.sim.trace import make_graph_trace, make_htap_trace
+
+HW = HWParams()
+
+
+@pytest.fixture(scope="module")
+def tt():
+    return prepare(make_graph_trace("components", "arxiv", threads=16,
+                                    num_kernels=3, windows_per_kernel=2,
+                                    scale=0.4))
+
+
+@pytest.fixture(scope="module")
+def tt_htap():
+    return prepare(make_htap_trace("htap128", threads=16, num_kernels=3,
+                                   windows_per_kernel=2, scale=0.004))
+
+
+def _rand_bitmap(tt, seed, p=0.02):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.random(tt.num_lines) < p)
+
+
+# ---------------------------------------------------------------------------
+# Packed primitives vs boolean seed references
+# ---------------------------------------------------------------------------
+
+
+def test_pack_unpack_roundtrip(tt):
+    bm = _rand_bitmap(tt, 0)
+    words = P.pack_bitmap(bm)
+    assert words.shape == (tt.num_line_words,)
+    np.testing.assert_array_equal(np.asarray(P.unpack_bitmap(words, tt.num_lines)),
+                                  np.asarray(bm))
+    # pad bits beyond num_lines stay zero
+    pad = tt.num_line_words * 32 - tt.num_lines
+    if pad:
+        tail = np.asarray(words)[-1] >> (32 - pad)
+        assert tail == 0
+
+
+def test_popcount_matches_sum(tt):
+    for seed in range(3):
+        bm = _rand_bitmap(tt, seed, p=0.1 * (seed + 1))
+        assert int(P.popcount_words(P.pack_bitmap(bm))) == int(jnp.sum(bm))
+
+
+def test_scatter_set_matches_bool(tt):
+    for w in (0, tt.num_windows - 1):
+        base = _rand_bitmap(tt, w)
+        a = P.scatter_set_bool(base, tt.cpu_writes[w], tt.cpu_w_valid[w])
+        b = P.scatter_set(P.pack_bitmap(base), tt.cpu_writes[w],
+                          tt.cpu_w_valid[w], tt.num_lines)
+        np.testing.assert_array_equal(np.asarray(a),
+                                      np.asarray(P.unpack_bitmap(b, tt.num_lines)))
+
+
+def test_scatter_set_duplicates_and_empty(tt):
+    # duplicate ids in one scatter and an all-invalid scatter
+    ids = jnp.asarray([5, 5, 5, 9, 9, 0], jnp.int32)
+    valid = jnp.asarray([1, 1, 1, 1, 1, 1], bool)
+    packed = P.scatter_set(jnp.zeros((tt.num_line_words,), jnp.uint32),
+                           ids, valid, tt.num_lines)
+    got = np.flatnonzero(np.asarray(P.unpack_bitmap(packed, tt.num_lines)))
+    np.testing.assert_array_equal(got, [0, 5, 9])
+    none = P.scatter_set(jnp.zeros((tt.num_line_words,), jnp.uint32),
+                         ids, jnp.zeros((6,), bool), tt.num_lines)
+    assert int(P.popcount_words(none)) == 0
+    # -1 padding sentinels with valid=None must be dropped, not wrapped into
+    # the last word (negative scatter indices) — regression.
+    neg = P.scatter_set(jnp.zeros((tt.num_line_words,), jnp.uint32),
+                        jnp.asarray([-1, -3, 4], jnp.int32), None, tt.num_lines)
+    got = np.flatnonzero(np.asarray(P.unpack_bitmap(neg, tt.num_lines)))
+    np.testing.assert_array_equal(got, [4])
+
+
+def test_gather_hits_matches_bool(tt):
+    bm = _rand_bitmap(tt, 3, p=0.3)
+    words = P.pack_bitmap(bm)
+    for w in (0, 1):
+        a = P.gather_hits_bool(bm, tt.cpu_reads[w], tt.cpu_r_valid[w])
+        b = P.gather_hits(words, tt.cpu_reads[w], tt.cpu_r_valid[w])
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sig_bits_from_ids_matches_bool(tt):
+    for w in range(3):
+        img = P.sig_bits_from_ids_bool(tt, tt.pim_reads[w], tt.pim_r_valid[w])
+        packed = P.sig_bits_from_ids(tt, tt.pim_reads[w], tt.pim_r_valid[w])
+        np.testing.assert_array_equal(np.asarray(P.pack_bitmap(img)),
+                                      np.asarray(packed))
+
+
+def test_sig_and_bank_from_bitmap_match_bool(tt):
+    bm = _rand_bitmap(tt, 7)
+    words = P.pack_bitmap(bm)
+    np.testing.assert_array_equal(
+        np.asarray(P.pack_bitmap(P.sig_bits_from_bitmap_bool(tt, bm))),
+        np.asarray(P.sig_bits_from_bitmap(tt, words)))
+    bank_b = P.bank_bits_from_bitmap_bool(tt, bm)
+    bank_p = P.bank_bits_from_bitmap(tt, words)
+    np.testing.assert_array_equal(
+        np.asarray(jax.vmap(P.pack_bitmap)(bank_b)), np.asarray(bank_p))
+
+
+def test_conflict_and_members_match_bool(tt):
+    for seed in range(4):
+        bm = _rand_bitmap(tt, seed, p=0.005 * (seed + 1))
+        words = P.pack_bitmap(bm)
+        img_b = P.sig_bits_from_ids_bool(tt, tt.pim_reads[seed],
+                                         tt.pim_r_valid[seed])
+        img_p = P.pack_bitmap(img_b)
+        c_bool = P.conflict_any_bool(tt, img_b, P.bank_bits_from_bitmap_bool(tt, bm))
+        c_packed = P.conflict_any(tt, img_p, P.bank_bits_from_bitmap(tt, words))
+        hits = P.line_sig_hits(tt, img_p)
+        c_fused = P.conflict_from_hits(tt, words, hits)
+        assert bool(c_bool) == bool(c_packed) == bool(c_fused)
+        m_bool = P.members_bool(tt, bm, img_b)
+        m_packed = P.members(tt, words, img_p)
+        np.testing.assert_array_equal(np.asarray(P.pack_bitmap(m_bool)),
+                                      np.asarray(m_packed))
+        np.testing.assert_array_equal(np.asarray(m_packed),
+                                      np.asarray(P.members_from_hits(words, hits)))
+
+
+def test_evict_to_cap_matches_bool(tt):
+    present = _rand_bitmap(tt, 11, p=0.5)
+    dirty = present & _rand_bitmap(tt, 12, p=0.6)
+    for w, cap in ((3, 64), (9, 1 << 20)):  # over and under cap
+        wdx = jnp.asarray(w)
+        pb, db, wbb = P.evict_to_cap_bool(present, dirty, wdx, cap)
+        pp, dp, wbp = P.evict_to_cap(P.pack_bitmap(present), P.pack_bitmap(dirty),
+                                     wdx, cap, tt.num_lines)
+        np.testing.assert_array_equal(np.asarray(P.pack_bitmap(pb)), np.asarray(pp))
+        np.testing.assert_array_equal(np.asarray(P.pack_bitmap(db)), np.asarray(dp))
+        assert float(wbb) == float(wbp)
+
+
+def test_uniq_count_vectorized_matches_loop():
+    rng = np.random.default_rng(0)
+    rows = rng.integers(-1, 40, size=(64, 96)).astype(np.int32)
+    rows[5] = -1  # fully-padded row
+    other = rng.integers(-1, 40, size=(64, 64)).astype(np.int32)
+    np.testing.assert_array_equal(P._uniq_count(rows), P._uniq_count_loop(rows))
+    np.testing.assert_array_equal(P._uniq_union_count(rows, other),
+                                  P._uniq_union_count_loop(rows, other))
+
+
+# ---------------------------------------------------------------------------
+# Full-simulation differentials: every accumulator of every mechanism
+# ---------------------------------------------------------------------------
+
+
+def _assert_results_equal(a, b, label):
+    da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+    for k in da:
+        assert da[k] == db[k], f"{label}: field {k}: packed={da[k]} bool={db[k]}"
+
+
+@pytest.mark.parametrize("fixture", ["tt", "tt_htap"])
+def test_all_mechanisms_bit_exact(fixture, request):
+    tt = request.getfixturevalue(fixture)
+    packed = run_all(tt, HW)
+    boolean = _boolref.run_all_bool(tt, HW)
+    for m in packed:
+        _assert_results_equal(packed[m], boolean[m], f"{tt.name}/{m}")
+
+
+@pytest.mark.parametrize("fixture", ["tt", "tt_htap"])
+def test_lazypim_full_commit_ablation_bit_exact(fixture, request):
+    """The fig12 ablation (partial_commits=False) exercises the accumulate-
+    across-windows dataflow; it must match the seed path too."""
+    tt = request.getfixturevalue(fixture)
+    cfg = LazyPIMConfig(partial_commits=False)
+    _assert_results_equal(simulate_lazypim(tt, HW, cfg),
+                          _boolref.simulate_lazypim_bool(tt, HW, cfg),
+                          f"{tt.name}/lazypim-fullcommit")
+
+
+def test_lazypim_no_dbi_bit_exact(tt):
+    cfg = LazyPIMConfig(use_dbi=False)
+    _assert_results_equal(simulate_lazypim(tt, HW, cfg),
+                          _boolref.simulate_lazypim_bool(tt, HW, cfg),
+                          "lazypim-nodbi")
+
+
+# ---------------------------------------------------------------------------
+# Sweep engine: batched == sequential, one compile per mechanism
+# ---------------------------------------------------------------------------
+
+
+def test_run_sweep_matches_sequential_loop():
+    threads = (4, 8, 12, 16)
+    tts = [prepare(make_graph_trace("pagerank", "arxiv", threads=t,
+                                    num_kernels=3, windows_per_kernel=2,
+                                    scale=0.4))
+           for t in threads]
+    hws = [HWParams(cpu_cores=t, pim_cores=t) for t in threads]
+    before = sweep_cache_sizes()
+    points = run_sweep(stack_traces(tts), stack_hw(hws))
+    after = sweep_cache_sizes()
+    # one compile per mechanism for the whole 4-point sweep (measured)
+    assert all(after[m] - before[m] <= 1 for m in after)
+    for i in range(len(threads)):
+        seq = run_all(tts[i], hws[i])
+        for m, r in points[i].items():
+            _assert_results_equal(r, seq[m], f"sweep[{i}]/{m}")
+
+
+def test_stack_traces_rejects_geometry_mismatch():
+    a = prepare(make_graph_trace("pagerank", "arxiv", threads=4,
+                                 num_kernels=2, windows_per_kernel=2, scale=0.4))
+    b = prepare(make_graph_trace("pagerank", "arxiv", threads=4,
+                                 num_kernels=3, windows_per_kernel=2, scale=0.4))
+    with pytest.raises(ValueError):
+        stack_traces([a, b])
