@@ -7,14 +7,20 @@ Three measurements, written to ``BENCH_engine.json`` at the repo root:
    ``repro.core.coherence``) vs the boolean seed path
    (``repro.core._boolref``), same traced-HWParams jit discipline on both
    sides, compile excluded (min over samples after a warm call).
-2. **End-to-end fig7 wall time** — the full 12-workload × 6-mechanism
-   speedup matrix (``benchmarks.fig7_speedup.run``) vs the same matrix on
-   the boolean path, including trace generation, prepare, and compiles.
+2. **End-to-end fig7 wall time** — the full extended 22-workload ×
+   6-mechanism speedup matrix (``benchmarks.fig7_speedup.run``) vs the
+   same matrix on the boolean path, including trace generation, prepare,
+   and compiles (key ``fig7_end_to_end_extended``; PR 2's
+   ``fig7_end_to_end`` was the 12-workload paper set).
 3. **Single-compile sweep** — a ``SWEEP_POINTS``-point off-chip-bandwidth
    sweep through ``repro.sim.engine.run_sweep`` with the XLA compile count
    *measured* (jit cache size per mechanism) against the seed-style
    alternative: HWParams as a ``static_argnums`` jit argument, which
    recompiles every point.
+4. **Trace-synthesis throughput** — the jit-compiled on-device generators
+   (``repro.sim.synth``) vs the sequential numpy reference
+   (``repro.sim._traceref``), per workload family, compile excluded, plus
+   a >=1M-line large instance demonstrating on-device feasibility.
 
 Usage: PYTHONPATH=src python -m benchmarks.run --bench engine
 """
@@ -29,15 +35,28 @@ from benchmarks.timing import write_bench_json
 from repro.core import _boolref
 from repro.core.coherence import LazyPIMConfig, _lazypim_acc
 from repro.core.mechanisms import ACC_FNS
-from repro.sim import engine
+from repro.sim import _traceref, engine, synth
 from repro.sim.costmodel import HWParams
 from repro.sim.engine import run_sweep, stack_hw, stack_traces, summarize
 from repro.sim.prep import prepare
-from repro.sim.trace import all_workloads, make_trace
+from repro.sim.trace import all_workloads, build_plan, make_trace
 
 STEADY_WORKLOADS = (("pagerank", "arxiv"), ("htap128", None))
 SWEEP_POINTS = 4
 SAMPLES = 5
+
+# Trace-synthesis throughput cases: one per family plus a >=1M-line large
+# instance (more kernels × wider windows — the regime the on-device
+# generator exists for; the numpy reference loops over every window).
+SYNTH_CASES = (
+    ("pagerank", "enron", {}),
+    ("htap256", None, {}),
+    ("bfs", "enron", {}),
+    ("htap_stream", None, {}),
+    ("mtmix", "enron", {}),
+    ("htap128", None, dict(scale=0.06, num_kernels=24, windows_per_kernel=16,
+                           label="htap128-large")),
+)
 
 
 def _steady_seconds(fn, *args) -> float:
@@ -78,18 +97,25 @@ def bench_mechanisms(hw: HWParams, cfg: LazyPIMConfig) -> dict:
 
 
 def bench_fig7_wall(hw: HWParams) -> dict:
+    """Full extended fig7 matrix (22 workloads × 6 mechanisms, incl. trace
+    generation, prepare and compiles) — packed vs the boolean seed path.
+    NOTE: recorded under ``fig7_end_to_end_extended`` — PR 2's
+    ``fig7_end_to_end`` measured the 12-workload paper set, a different
+    quantity (the extended matrix adds ~3 trace geometries of scan
+    recompiles), so the key changed to keep committed records comparable."""
     from benchmarks import fig7_speedup
 
     t0 = time.perf_counter()
-    fig7_speedup.run()
+    fig7_speedup.run(extended=True)
     packed_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    for app, g in all_workloads():
+    for app, g in all_workloads(extended=True):
         tt = prepare(make_trace(app, g, threads=16))
         summarize(_boolref.run_all_bool(tt, hw), hw)
     bool_s = time.perf_counter() - t0
-    return {"packed_s": packed_s, "bool_s": bool_s,
+    return {"workloads": len(all_workloads(extended=True)),
+            "packed_s": packed_s, "bool_s": bool_s,
             "speedup": bool_s / packed_s}
 
 
@@ -141,13 +167,54 @@ def bench_sweep(hw: HWParams, cfg: LazyPIMConfig) -> dict:
     }
 
 
+def bench_trace_synth() -> dict:
+    """On-device jit generation vs the sequential numpy reference, per
+    family; steady state = min over samples, compile + one warm call
+    excluded on the JAX side (the reference has no compile)."""
+    out = {}
+    for app, g, kw in SYNTH_CASES:
+        kw = dict(kw)
+        label = kw.pop("label", f"{app}-{g}" if g else app)
+        plan, edges, _ = build_plan(app, g, threads=16, seed=0, **kw)
+        fn, args = synth.generator(plan, seed=0, edges=edges)
+
+        jax.block_until_ready(fn(*args))          # compile
+        jax.block_until_ready(fn(*args))          # warm
+        jax_s = float("inf")
+        for _ in range(SAMPLES):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            jax_s = min(jax_s, time.perf_counter() - t0)
+
+        ref_s = float("inf")
+        for _ in range(max(2, SAMPLES - 2)):
+            t0 = time.perf_counter()
+            _traceref.synthesize_ref(plan, seed=0, edges=edges)
+            ref_s = min(ref_s, time.perf_counter() - t0)
+
+        out[label] = {
+            "num_lines": plan.total_lines,
+            "num_windows": plan.num_windows,
+            "jax_ms": jax_s * 1e3,
+            "ref_ms": ref_s * 1e3,
+            "jax_windows_per_sec": plan.num_windows / jax_s,
+            "ref_windows_per_sec": plan.num_windows / ref_s,
+            "speedup": ref_s / jax_s,
+        }
+    largest = max(out, key=lambda k: out[k]["num_lines"])
+    out["largest_workload"] = {"name": largest,
+                               "speedup": out[largest]["speedup"]}
+    return out
+
+
 def run() -> dict:
     hw, cfg = HWParams(), LazyPIMConfig()
     return {
         "backend": jax.default_backend(),
         "steady_state": bench_mechanisms(hw, cfg),
-        "fig7_end_to_end": bench_fig7_wall(hw),
+        "fig7_end_to_end_extended": bench_fig7_wall(hw),
         "hw_sweep": bench_sweep(hw, cfg),
+        "trace_synth": bench_trace_synth(),
     }
 
 
@@ -158,14 +225,19 @@ def main():
         for mech, r in wl["mechanisms"].items():
             print(f"{name},{mech},packed_ms,{r['packed_ms']:.2f},bool_ms,"
                   f"{r['bool_ms']:.2f},speedup,{r['speedup']:.2f}")
-    f7 = results["fig7_end_to_end"]
-    print(f"fig7_wall,packed_s,{f7['packed_s']:.1f},bool_s,{f7['bool_s']:.1f},"
+    f7 = results["fig7_end_to_end_extended"]
+    print(f"fig7_wall_ext,packed_s,{f7['packed_s']:.1f},bool_s,{f7['bool_s']:.1f},"
           f"speedup,{f7['speedup']:.2f}")
     sw = results["hw_sweep"]
     print(f"sweep_{sw['points']}pt,compiles,"
           f"{max(sw['sweep_compiles_per_mechanism'].values())},"
           f"static_compiles,{max(sw['static_hw_compiles_per_mechanism'].values())},"
           f"wall_speedup,{sw['wall_speedup']:.2f}")
+    for name, r in results["trace_synth"].items():
+        if name == "largest_workload":
+            continue
+        print(f"synth,{name},lines,{r['num_lines']},jax_ms,{r['jax_ms']:.2f},"
+              f"ref_ms,{r['ref_ms']:.2f},speedup,{r['speedup']:.1f}")
     print(f"wrote,{out_path}")
 
 

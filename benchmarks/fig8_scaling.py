@@ -1,6 +1,7 @@
-"""Fig. 8: PageRank-arXiv speedup vs thread count (4/8/16), normalized to
-CPU-only at each count.  Validates the scaling ORDER: Ideal > LazyPIM > FG
-> {CG, NC}, with FG scaling better than CG/NC.
+"""Fig. 8: speedup vs thread count (4/8/16), normalized to CPU-only at
+each count.  Validates the scaling ORDER: Ideal > LazyPIM > FG > {CG, NC},
+with FG scaling better than CG/NC — on the paper's PageRank-arXiv and on
+the new bursty-frontier family (BFS-arXiv).
 
 Runs on the single-compile sweep path: the three thread counts are stacked
 trace/hardware axes batched through one compiled step per mechanism
@@ -12,26 +13,33 @@ from repro.sim.prep import prepare
 from repro.sim.trace import make_trace
 
 THREADS = (4, 8, 16)
+WORKLOADS = (("pagerank", "arxiv"), ("bfs", "arxiv"))
 
 
-def sweep_points():
+def sweep_points(app: str = "pagerank", graph: str = "arxiv"):
+    """(points, hws) for one workload swept over THREADS — same-geometry
+    traces stacked through one compiled step per mechanism."""
     hws = [HWParams(cpu_cores=t, pim_cores=t) for t in THREADS]
-    tts = stack_traces([prepare(make_trace("pagerank", "arxiv", threads=t))
+    tts = stack_traces([prepare(make_trace(app, graph, threads=t))
                         for t in THREADS])
     return run_sweep(tts, stack_hw(hws)), hws
 
 
 def run():
-    points, hws = sweep_points()
-    return {t: summarize(points[i], hws[i]) for i, t in enumerate(THREADS)}
+    out = {}
+    for app, graph in WORKLOADS:
+        points, hws = sweep_points(app, graph)
+        out[f"{app}-{graph}"] = {
+            t: summarize(points[i], hws[i]) for i, t in enumerate(THREADS)}
+    return out
 
 
 def main():
-    rows = run()
     mechs = ("fg", "cg", "nc", "lazypim", "ideal")
-    print("threads," + ",".join(mechs))
-    for t, r in rows.items():
-        print(f"{t}," + ",".join(f"{r[m]['speedup']:.3f}" for m in mechs))
+    for name, rows in run().items():
+        print(f"{name}:threads," + ",".join(mechs))
+        for t, r in rows.items():
+            print(f"{t}," + ",".join(f"{r[m]['speedup']:.3f}" for m in mechs))
 
 
 if __name__ == "__main__":

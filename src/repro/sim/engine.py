@@ -13,7 +13,10 @@ compiled step function over *stacked* hardware/trace axes — a fig8/fig10
 style sweep is one compile plus one batched execution instead of N
 sequential jit misses.  Build the stacked axes with :func:`stack_hw` (any
 HWParams fields may vary) and :func:`stack_traces` (same-geometry traces,
-e.g. the same workload generated at different thread counts).  Every
+e.g. the same workload generated at different thread counts — any family
+from ``trace.all_workloads(extended=True)``, including the new
+frontier/streaming/multi-tenant workloads, since trace synthesis keys
+geometry on the static plan, not on seed or threads).  Every
 ``HWParams`` field may vary per sweep point.  ``LazyPIMConfig`` is passed
 unbatched (one config per :func:`run_sweep` call): its numeric fields are
 traced leaves, so *calls* with different values reuse the compiled step,
@@ -204,7 +207,8 @@ def run_workload(
     lazy_cfg: LazyPIMConfig | None = None,
     **trace_kw,
 ) -> dict[str, SimResult]:
-    """Convenience: trace -> prepare -> run_all.
+    """Convenience: trace -> prepare -> run_all (any workload family —
+    seed graph/HTAP or the extended frontier/streaming/multi-tenant apps).
 
     With ``spec=None``, ``prepare`` applies the shared
     :func:`repro.core.signatures.default_spec` singleton — one set of

@@ -10,6 +10,7 @@ fields, uniform random integers).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import zlib
 
 import numpy as np
@@ -40,10 +41,14 @@ class Graph:
         return int(self.edges.shape[0])
 
 
+@functools.lru_cache(maxsize=32)
 def make_graph(name: str, seed: int = 0, scale: float = 1.0) -> Graph:
     """Power-law graph with the paper dataset's node/edge counts.
 
     ``scale`` < 1 shrinks the graph proportionally (used by fast tests).
+    Graphs are *inputs* (like the SNAP files) and treated as read-only, so
+    the constructor is memoized — several workload families (and both
+    synthesis backends) share one instance per (name, seed, scale).
     """
     shape = GRAPH_SHAPES[name]
     n = max(16, int(shape["nodes"] * scale))
@@ -60,6 +65,7 @@ def make_graph(name: str, seed: int = 0, scale: float = 1.0) -> Graph:
     edges = np.stack([perm[src], perm[dst]], axis=1)
     # sort by source: Ligra CSR edge arrays are laid out contiguously per src
     edges = edges[np.argsort(edges[:, 0], kind="stable")]
+    edges.setflags(write=False)  # the cached instance is shared — enforce it
     return Graph(name=name, num_nodes=n, edges=edges)
 
 
@@ -120,6 +126,64 @@ def layout_for_graph(g: Graph) -> GraphLayout:
         frontier_lines=-(-g.num_nodes // 64),
         edge_lines=-(-g.num_edges // per_line_e),
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class MTLayout:
+    """Cache-line layout of a *shared* PIM data region hosting two tenant
+    applications: each tenant gets private ``p_curr | p_next | frontier``
+    arrays, and both share one CSR edge array.
+
+    Region order: [A.p_curr | A.p_next | A.frontier |
+                   B.p_curr | B.p_next | B.frontier | edges].
+    """
+
+    vertex_lines: int
+    frontier_lines: int
+    edge_lines: int
+
+    @property
+    def a_pc(self) -> int:
+        return 0
+
+    @property
+    def a_pn(self) -> int:
+        return self.vertex_lines
+
+    @property
+    def a_fr(self) -> int:
+        return 2 * self.vertex_lines
+
+    @property
+    def tenant_lines(self) -> int:
+        return 2 * self.vertex_lines + self.frontier_lines
+
+    @property
+    def b_pc(self) -> int:
+        return self.tenant_lines
+
+    @property
+    def b_pn(self) -> int:
+        return self.tenant_lines + self.vertex_lines
+
+    @property
+    def b_fr(self) -> int:
+        return self.tenant_lines + 2 * self.vertex_lines
+
+    @property
+    def edge_base(self) -> int:
+        return 2 * self.tenant_lines
+
+    @property
+    def total_lines(self) -> int:
+        return self.edge_base + self.edge_lines
+
+
+def mt_layout_for_graph(g: Graph) -> MTLayout:
+    one = layout_for_graph(g)
+    return MTLayout(vertex_lines=one.vertex_lines,
+                    frontier_lines=one.frontier_lines,
+                    edge_lines=one.edge_lines)
 
 
 @dataclasses.dataclass(frozen=True)

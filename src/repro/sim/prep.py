@@ -618,11 +618,22 @@ def _pack_rows_np(bits: np.ndarray) -> np.ndarray:
 def prepare(trace: WindowTrace, spec: SignatureSpec | None = None) -> TraceTensors:
     """Stage a WindowTrace onto device with precomputed hash tables.
 
+    Accepts numpy- or device-backed traces (the JAX synthesis path of
+    ``repro.sim.synth`` hands over device arrays); each access-list field
+    is normalized to host numpy exactly once, so the derived host-side
+    tensors (validity masks, packed pre-writes, unique-line counts) don't
+    re-trigger a device transfer per use.
+
     Uses the shared :func:`default_spec` singleton when no spec is given so
     the byte-sliced H3 tables (and every jit cache keyed on the spec, which
     is static TraceTensors metadata) are reused across traces."""
     spec = spec or default_spec()
     n = trace.num_lines
+    pim_reads = np.asarray(trace.pim_reads)
+    pim_writes = np.asarray(trace.pim_writes)
+    cpu_reads = np.asarray(trace.cpu_reads)
+    cpu_writes = np.asarray(trace.cpu_writes)
+    pre_writes = np.asarray(trace.pre_writes)
     # Byte-sliced H3 positions for every line in the PIM data region
     # (one-time; hash_positions is the fast table-lookup path).
     line_ids = jnp.arange(n, dtype=jnp.uint32)
@@ -641,25 +652,25 @@ def prepare(trace: WindowTrace, spec: SignatureSpec | None = None) -> TraceTenso
         spec=spec,
         line_pos=line_pos,
         line_reg=line_reg,
-        pim_reads=dev(trace.pim_reads),
-        pim_writes=dev(trace.pim_writes),
-        cpu_reads=dev(trace.cpu_reads),
-        cpu_writes=dev(trace.cpu_writes),
-        pim_r_valid=dev(trace.pim_reads >= 0, jnp.bool_),
-        pim_w_valid=dev(trace.pim_writes >= 0, jnp.bool_),
-        cpu_r_valid=dev(trace.cpu_reads >= 0, jnp.bool_),
-        cpu_w_valid=dev(trace.cpu_writes >= 0, jnp.bool_),
+        pim_reads=dev(pim_reads),
+        pim_writes=dev(pim_writes),
+        cpu_reads=dev(cpu_reads),
+        cpu_writes=dev(cpu_writes),
+        pim_r_valid=dev(pim_reads >= 0, jnp.bool_),
+        pim_w_valid=dev(pim_writes >= 0, jnp.bool_),
+        cpu_r_valid=dev(cpu_reads >= 0, jnp.bool_),
+        cpu_w_valid=dev(cpu_writes >= 0, jnp.bool_),
         kernel_id=dev(trace.kernel_id),
         kernel_start=dev(trace.kernel_start, jnp.bool_),
         kernel_end=dev(trace.kernel_end, jnp.bool_),
-        pre_writes=dev(trace.pre_writes, jnp.bool_),
-        pre_writes_words=dev(_pack_rows_np(trace.pre_writes), jnp.uint32),
+        pre_writes=dev(pre_writes, jnp.bool_),
+        pre_writes_words=dev(_pack_rows_np(pre_writes), jnp.uint32),
         pim_instr=dev(trace.pim_instr, jnp.float32),
         cpu_instr=dev(trace.cpu_instr, jnp.float32),
         cpu_priv=dev(trace.cpu_priv_accesses, jnp.float32),
         cpu_priv_miss_rate=float(trace.cpu_priv_miss_rate),
         cpu_reuse=float(trace.cpu_reuse),
-        pim_uniq_r=dev(_uniq_count(trace.pim_reads), jnp.float32),
-        pim_uniq_w=dev(_uniq_count(trace.pim_writes), jnp.float32),
-        pim_uniq=dev(_uniq_union_count(trace.pim_reads, trace.pim_writes), jnp.float32),
+        pim_uniq_r=dev(_uniq_count(pim_reads), jnp.float32),
+        pim_uniq_w=dev(_uniq_count(pim_writes), jnp.float32),
+        pim_uniq=dev(_uniq_union_count(pim_reads, pim_writes), jnp.float32),
     )

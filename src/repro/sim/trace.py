@@ -1,82 +1,82 @@
-"""Workload trace generation (paper §6.1–§6.2).
+"""Workload trace façade (paper §6.1–§6.2 + extended families).
 
 The paper partitions each application into PIM kernels (memory-intensive,
-cache-hostile: Ligra's ``edgeMap``, the IMDB's analytical select/join scans)
-and processor threads (cache-friendly: scheduling, bookkeeping, transactional
-queries), then simulates their concurrent execution in gem5.
+cache-hostile) and processor threads (cache-friendly), then simulates their
+concurrent execution in gem5.  We regenerate the same structure as *window
+traces*: a sequence of partial-kernel windows (<=250 signature insertions
+per set, §5.4); per window the cache-line addresses touched by the PIM
+kernel and by the concurrently-running processor threads, plus instruction
+counts, and a per-kernel pre-write line set for the inter-kernel processor
+phase (the source of the *dirty conflicts* that dominate the CPUWriteSet —
+§5.6: 95.4 % of insertions).
 
-We regenerate the same structure as *window traces*: execution is a sequence
-of partial-kernel windows (bounded at <=250 signature insertions per set,
-§5.4); per window we record the cache-line addresses touched by the PIM
-kernel (reads/writes) and by the concurrently-running processor threads
-(reads/writes into the PIM data region), plus instruction counts.  Between
-kernel invocations the processor performs its serial phase (frontier
-management, transaction-commit bursts), captured as a per-kernel pre-write
-line set — the source of the *dirty conflicts* that dominate LazyPIM's
-CPUWriteSet (§5.6: 95.4 % of insertions).
+Synthesis itself is JAX-native (:mod:`repro.sim.synth`): every random value
+is a Threefry-2x32 counter hash, so a whole trace is one jit-compiled
+tensor program produced on-device.  ``make_trace(..., backend="ref")``
+runs the sequential numpy reference (:mod:`repro.sim._traceref`) instead;
+the two are bit-identical on every workload (``tests/test_trace_synth.py``).
 
-Access-pattern shapes follow the applications:
+Workload families and their access-pattern rationale:
 
-* Graph ``edgeMap`` (pull-direction): sweep edges in CSR order — edge-array
-  reads are sequential, ``p_curr[neighbor]`` reads are *scattered* through
-  the power-law degree distribution (the pointer-chasing the paper targets),
-  ``p_next[v]`` writes are near-sequential.
-* CPU threads touch bookkeeping state: a few ``p_curr`` lines (the only
-  RAW-capable writes), frontier/p_next lines (WAR/WAW — not conflicts under
-  coarse-grained atomicity, §4.1), and reads of kernel outputs.  Per the
-  paper's own partitioning criteria (§6.2), array-scale sweeps are *kernel*
-  work; the processor-resident writes are tens of lines per window.
-* HTAP: analytics scan tables sequentially + probe a hash-join area randomly;
-  transactions touch a few random tuples, biased toward the hot table the
-  analytics are scanning (real-time analytics on fresh transactional data).
+* **Graph edgeMap** (``pagerank``/``radii``/``components`` × SNAP-shaped
+  inputs, §6.1): sequential CSR edge-array reads + ``p_curr[neighbor]``
+  gathers scattered through the power-law degree distribution (the
+  pointer-chasing the paper targets); processor threads touch bookkeeping
+  state, with a per-app rate of RAW-capable ``p_curr`` writes (§6.2).
+* **HTAP IMDB** (``htap128/192/256``, §6.1): analytics scan tables
+  sequentially + probe a hash-join area randomly; transactions touch a few
+  tuples biased toward the scanned (hot) table — real-time analytics on
+  fresh transactional data.
+* **BFS/SSSP frontier kernels** (``bfs``/``sssp``, new): pull/relax sweeps
+  whose per-level frontier rises and falls — *bursty, frontier-sized
+  windows* (near-empty at the root/fringe, full at the peak level), with
+  host-side relaxation assists as the RAW-capable writes.  Exercises the
+  irregular-update patterns the PIM-adoption literature calls out (Ghose
+  et al. 2018; Mutlu et al. 2020) beyond the paper's three Ligra kernels.
+* **Streaming-ingest HTAP** (``htap_stream``, new): transactions *append*
+  tuples at a moving tail; analytics scan the recently-ingested region a
+  fixed lag behind it (§3.1's real-time-analytics case).  The hot tail
+  makes the dirty-line class dominant — exactly the CPUWriteSet pressure
+  PIM-DBI targets (§5.6) — and the reuse-heavy hot-tail reads are the
+  worst case for NC.
+* **Multi-tenant mix** (``mtmix``, new): two applications' kernels
+  interleave over one shared PIM data region (shared CSR edges, private
+  vertex arrays).  Both tenants' threads write every window, so the
+  CPUWriteSet carries *cross-kernel* pressure: the inactive tenant's
+  writes alias into the active kernel's PIMReadSet only through real H3
+  false positives (§5.3/§5.6).
 
-Each recorded CPU access stands for ``cpu_reuse`` dynamic accesses (temporal
-locality within a window): cacheable mechanisms pay one first-touch, NC pays
-DRAM every time — this reproduces the paper's "38.6 % of accesses to PIM data
-come from the processor" ratio at the dynamic-access level.
-
-Traces are generated in numpy with fixed seeds (they are *inputs*, like the
-SNAP datasets); the simulation itself is pure JAX (``repro.sim.engine``).
-All reported metrics are ratios (speedup / normalized traffic / energy),
-which are invariant to the window subsampling factor (DESIGN.md §7).
+Each recorded CPU access stands for ``cpu_reuse`` dynamic accesses
+(temporal locality within a window); all reported metrics are ratios,
+invariant to the window subsampling factor (DESIGN.md §7).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import zlib
 
 import numpy as np
 
-from repro.sim import graphs as G
-
-# Window geometry: a partial kernel ends at 250 inserted addresses (§5.4).
-MAX_SIG_ADDRS = 250
-AR = 256  # PIM read slots per window
-AW = 256  # PIM write slots per window
-BR = 64   # CPU->PIM-region read slots per window
-BW = 64   # CPU->PIM-region write slots per window
+from repro.sim import synth
+from repro.sim.synth import AR, AW, BR, BW, MAX_SIG_ADDRS  # noqa: F401  (re-export)
+from repro.sim.synth import APP_CPU_WRITES  # noqa: F401  (re-export)
 
 GRAPH_APPS = ("pagerank", "radii", "components")
 GRAPH_INPUTS = ("enron", "arxiv", "gnutella")
 HTAP_APPS = ("htap128", "htap192", "htap256")
+FRONTIER_APPS = ("bfs", "sssp")
+STREAM_APPS = ("htap_stream",)
+MT_APPS = ("mtmix",)
 
-# Per-app concurrent-write behavior: (raw_writes_per_window, hot_bias).
-# raw writes land on p_curr (the kernel's read array) and can be true RAW
-# conflicts; hot_bias is the fraction drawn from the power-law destination
-# distribution (label propagation relabels hot vertices).
-# (raw_write_rate per window, hot_bias): rates < 1 mean a RAW-capable write
-# happens only in that fraction of windows.
-APP_CPU_WRITES = {
-    "pagerank": (0.35, 0.0),    # regular sweep, uniform bookkeeping
-    "radii": (0.6, 0.35),       # frontier-based, medium overlap
-    "components": (1.5, 0.85),  # label propagation on hot vertices (worst)
-}
+# app -> needs a graph input?
+ALL_APPS = {**{a: True for a in GRAPH_APPS + FRONTIER_APPS + MT_APPS},
+            **{a: False for a in HTAP_APPS + STREAM_APPS}}
 
 
 @dataclasses.dataclass(frozen=True)
 class WindowTrace:
-    """Fixed-shape trace of W partial-kernel windows (numpy, device-ready)."""
+    """Fixed-shape trace of W partial-kernel windows (numpy or device
+    arrays — ``prepare`` accepts either)."""
 
     name: str
     threads: int
@@ -109,291 +109,130 @@ class WindowTrace:
         return int(self.pre_writes.shape[0])
 
 
-def _pad(ids: np.ndarray, width: int) -> np.ndarray:
-    out = np.full((width,), -1, dtype=np.int32)
-    n = min(len(ids), width)
-    out[:n] = ids[:n]
-    return out
-
-
-# --------------------------------------------------------------------------
-# Graph applications (Ligra: PageRank / Radii / Components)
-# --------------------------------------------------------------------------
-
-
-def make_graph_trace(
+def build_plan(
     app: str,
-    graph_name: str,
+    graph_name: str | None = None,
     threads: int = 16,
     num_kernels: int = 24,
     windows_per_kernel: int = 3,
     seed: int = 0,
-    scale: float = 1.0,
-    cpu_reuse: float = 6.0,
+    scale: float | None = None,
+    cpu_reuse: float | None = None,
+):
+    """(plan, edges-or-None, display name) for any workload family, with
+    the same per-family defaults ``make_trace`` applies (scale 0.01 for the
+    table families, streaming's higher ``cpu_reuse``).  The public plan
+    entry point for benchmarks that drive :mod:`repro.sim.synth` directly."""
+    if app not in ALL_APPS:
+        raise ValueError(f"unknown app {app!r} (know {sorted(ALL_APPS)})")
+    if ALL_APPS[app] and graph_name not in GRAPH_INPUTS:
+        raise ValueError(
+            f"{app!r} needs a graph input from {GRAPH_INPUTS}, got {graph_name!r}")
+    if not ALL_APPS[app] and graph_name is not None:
+        raise ValueError(f"{app!r} is a table workload: graph_name must be "
+                         f"None, got {graph_name!r}")
+    if scale is None:
+        scale = 0.01 if app in HTAP_APPS + STREAM_APPS else 1.0
+    if cpu_reuse is None:
+        cpu_reuse = 8.0 if app in STREAM_APPS else 6.0
+    return _build(app, graph_name, threads, num_kernels, windows_per_kernel,
+                  seed, scale, cpu_reuse)
+
+
+def _build(app, graph_name, threads, num_kernels, wpk, seed, scale, cpu_reuse):
+    if app in GRAPH_APPS:
+        plan, edges = synth.build_graph_plan(
+            app, graph_name, threads, num_kernels, wpk, seed, scale, cpu_reuse)
+        return plan, edges, f"{app}-{graph_name}"
+    if app in FRONTIER_APPS:
+        plan, edges = synth.build_frontier_plan(
+            app, graph_name, threads, num_kernels, wpk, seed, scale, cpu_reuse)
+        return plan, edges, f"{app}-{graph_name}"
+    if app in MT_APPS:
+        plan, edges = synth.build_mt_plan(
+            app, graph_name, threads, num_kernels, wpk, seed, scale, cpu_reuse)
+        return plan, edges, f"{app}-{graph_name}"
+    if app in HTAP_APPS:
+        plan = synth.build_htap_plan(
+            app, threads, num_kernels, wpk, seed, scale, cpu_reuse)
+        return plan, None, app
+    if app in STREAM_APPS:
+        plan = synth.build_stream_plan(
+            app, threads, num_kernels, wpk, seed, scale, cpu_reuse)
+        return plan, None, app
+    raise ValueError(f"unknown app {app!r}")
+
+
+def _assemble(plan, name: str, arrays: dict) -> WindowTrace:
+    return WindowTrace(
+        name=name, threads=plan.threads, num_lines=plan.total_lines,
+        cpu_priv_miss_rate=plan.cpu_priv_miss_rate, cpu_reuse=plan.cpu_reuse,
+        **arrays)
+
+
+def make_trace(
+    app: str,
+    graph_name: str | None = None,
+    threads: int = 16,
+    seed: int = 0,
+    num_kernels: int = 24,
+    windows_per_kernel: int = 3,
+    scale: float | None = None,
+    cpu_reuse: float | None = None,
+    backend: str = "jax",
 ) -> WindowTrace:
+    """Uniform entry point for every workload family.
+
+    Graph-input families (graph/frontier/mtmix apps) need ``graph_name``;
+    table families (HTAP/streaming) don't.  ``backend="jax"`` (default)
+    runs the jit-compiled on-device generator; ``backend="ref"`` the
+    sequential numpy reference — bit-identical by construction and by test.
+    """
+    plan, edges, name = build_plan(app, graph_name, threads, num_kernels,
+                                   windows_per_kernel, seed, scale, cpu_reuse)
+    if backend == "jax":
+        arrays = synth.synthesize(plan, seed, edges)
+    elif backend == "ref":
+        from repro.sim import _traceref
+
+        arrays = _traceref.synthesize_ref(plan, seed, edges)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return _assemble(plan, name, arrays)
+
+
+def make_graph_trace(app, graph_name, threads=16, num_kernels=24,
+                     windows_per_kernel=3, seed=0, scale=1.0, cpu_reuse=6.0,
+                     backend="jax") -> WindowTrace:
     """Trace for a Ligra graph app (see module docstring for the shapes)."""
     assert app in GRAPH_APPS, app
-    g = G.make_graph(graph_name, seed=seed, scale=scale)
-    lay = G.layout_for_graph(g)
-    # stable across processes (hash() is PYTHONHASHSEED-randomized)
-    base = (seed * 7919) ^ (zlib.crc32(f"{app}/{graph_name}".encode()) & 0xFFFFF)
-    rng = np.random.default_rng(base)          # kernel structure
-    rng_w = np.random.default_rng(base ^ 0xA5A5)   # concurrent CPU writes
-    rng_r = np.random.default_rng(base ^ 0x5A5A)   # concurrent CPU reads
-    # The CPU threads' cached working set: a stable pool of hot vertices
-    # (scheduler/bookkeeping state is reused across windows — cacheable
-    # mechanisms reach steady-state hits; CG's per-kernel invalidation and
-    # NC's uncacheability pay over and over).
-    read_pool = rng_r.choice(g.num_nodes, size=min(600, g.num_nodes), replace=False).astype(np.int32)
-
-    num_windows = num_kernels * windows_per_kernel
-    # Edges per partial kernel: real windows close on the instruction cap
-    # before the 250-address signature cap (§5.4) — pointer chasing revisits
-    # lines, so unique-line counts stay well under the cap.
-    edges_per_window = 60
-
-    pim_reads = np.full((num_windows, AR), -1, dtype=np.int32)
-    pim_writes = np.full((num_windows, AW), -1, dtype=np.int32)
-    cpu_reads = np.full((num_windows, BR), -1, dtype=np.int32)
-    cpu_writes = np.full((num_windows, BW), -1, dtype=np.int32)
-    pre_writes = np.zeros((num_kernels, lay.total_lines), dtype=bool)
-
-    raw_w, hot_bias = APP_CPU_WRITES[app]
-    safe_w = 1           # p_next / frontier writes (WAR/WAW, never conflicts)
-    reads_n = 44         # p_next / frontier reads (the CPU's cached working set)
-
-    frontier_frac = {"pagerank": 1.0, "radii": 0.45, "components": 0.6}[app]
-    w = 0
-    for k in range(num_kernels):
-        # Frontier for this iteration: PageRank sweeps everything; Radii and
-        # Components process a shrinking active subset.
-        active_n = max(64, int(g.num_edges * frontier_frac ** (k % 6)))
-        e0 = int(rng.integers(0, max(1, g.num_edges - active_n)))
-
-        # Inter-kernel processor phase: frontier management + bookkeeping.
-        # (Array-scale rewrites are kernel work per the paper's partitioning.)
-        bk_vtx = rng.choice(g.num_nodes, size=4, replace=False).astype(np.int32)
-        pre = np.concatenate([
-            lay.frontier_line(bk_vtx),
-            lay.vertex_line(lay.p_curr_base, bk_vtx),
-        ])
-        pre_writes[k, pre] = True
-
-        for _ in range(windows_per_kernel):
-            lo = e0 + (w % windows_per_kernel) * edges_per_window
-            eidx = (np.arange(edges_per_window) + lo) % g.num_edges
-            src = g.edges[eidx, 0]
-            dst = g.edges[eidx, 1]
-            # edgeMap: sequential edge-array lines + scattered
-            # p_curr[neighbor] gathers.  PageRank (pull) writes p_next[v]
-            # near-sequentially; Radii/Components (push-style label updates)
-            # scatter writes through the destination distribution.
-            reads = np.empty((2 * edges_per_window,), dtype=np.int32)
-            reads[0::2] = lay.edge_line(eidx.astype(np.int32))
-            reads[1::2] = lay.vertex_line(lay.p_curr_base, dst)
-            if app == "pagerank":
-                writes = lay.vertex_line(lay.p_next_base, src)
-            else:
-                writes = lay.vertex_line(lay.p_next_base, dst)
-            pim_reads[w] = _pad(reads, AR)
-            pim_writes[w] = _pad(writes, AW)
-
-            # Concurrent processor-thread activity in the PIM region.
-            n_raw = int(raw_w) + int(rng_w.random() < raw_w - int(raw_w))
-            raw_list = []
-            for _ in range(n_raw):
-                if rng_w.random() < hot_bias:
-                    raw_list.append(g.edges[rng_w.integers(0, g.num_edges), 1])
-                else:
-                    raw_list.append(rng_w.integers(0, g.num_nodes))
-            raw_v = np.asarray(raw_list, dtype=np.int32)
-            safe_v = rng_w.integers(0, g.num_nodes, safe_w).astype(np.int32)
-            cw = np.concatenate([
-                lay.vertex_line(lay.p_curr_base, raw_v),
-                lay.vertex_line(lay.p_next_base, safe_v[:2]),
-                lay.frontier_line(safe_v[2:]),
-            ])
-            cr_v = rng_r.choice(read_pool, size=reads_n)
-            cr = np.concatenate([
-                lay.vertex_line(lay.p_next_base, cr_v[: reads_n // 2]),
-                lay.frontier_line(cr_v[reads_n // 2 :]),
-            ])
-            cpu_writes[w] = _pad(cw, BW)
-            cpu_reads[w] = _pad(cr, BR)
-            w += 1
-
-    n_pim_acc = (pim_reads >= 0).sum(1) + (pim_writes >= 0).sum(1)
-    n_cpu_acc = (cpu_reads >= 0).sum(1) + (cpu_writes >= 0).sum(1)
-    kernel_id = np.repeat(np.arange(num_kernels, dtype=np.int32), windows_per_kernel)
-    kernel_start = np.zeros((num_windows,), dtype=bool)
-    kernel_start[::windows_per_kernel] = True
-    kernel_end = np.zeros((num_windows,), dtype=bool)
-    kernel_end[windows_per_kernel - 1 :: windows_per_kernel] = True
-
-    return WindowTrace(
-        name=f"{app}-{graph_name}",
-        threads=threads,
-        num_lines=lay.total_lines,
-        pim_reads=pim_reads,
-        pim_writes=pim_writes,
-        cpu_reads=cpu_reads,
-        cpu_writes=cpu_writes,
-        kernel_id=kernel_id,
-        kernel_start=kernel_start,
-        kernel_end=kernel_end,
-        pre_writes=pre_writes,
-        pim_instr=(n_pim_acc * 3.0).astype(np.float32),  # tight edgeMap loop
-        cpu_instr=(n_cpu_acc * cpu_reuse * 6.0 + threads * 420.0).astype(np.float32),
-        cpu_priv_accesses=np.full((num_windows,), threads * 160.0, np.float32),
-        cpu_priv_miss_rate=0.002,
-        cpu_reuse=cpu_reuse,
-    )
+    return make_trace(app, graph_name, threads=threads, seed=seed,
+                      num_kernels=num_kernels,
+                      windows_per_kernel=windows_per_kernel, scale=scale,
+                      cpu_reuse=cpu_reuse, backend=backend)
 
 
-# --------------------------------------------------------------------------
-# HTAP in-memory database (transactions on CPU, analytics on PIM)
-# --------------------------------------------------------------------------
-
-
-def make_htap_trace(
-    app: str = "htap128",
-    threads: int = 16,
-    num_kernels: int = 24,
-    windows_per_kernel: int = 3,
-    seed: int = 0,
-    scale: float = 0.01,
-    cpu_reuse: float = 6.0,
-) -> WindowTrace:
-    """Trace for the HTAP IMDB (§6.1).
-
-    PIM kernel = analytical queries: select = sequential scan over a table's
-    tuple lines; join = scan + random probes/writes into a hash area (the
-    hash-join kernel [50]).  Processor threads = transactions, each touching
-    a few tuples (reads and writes) — short-lived, latency-sensitive,
-    cache-resident (§3.1).  Transactions are biased toward the table the
-    analytics are scanning (real-time analytics over fresh writes), which is
-    what creates RAW conflicts.
-
-    ``htap128/192/256``: more concurrent analytical queries shift work toward
-    PIM (higher PIM:CPU ratio) without changing the txn arrival rate.
-    """
+def make_htap_trace(app="htap128", threads=16, num_kernels=24,
+                    windows_per_kernel=3, seed=0, scale=0.01, cpu_reuse=6.0,
+                    backend="jax") -> WindowTrace:
+    """Trace for the HTAP IMDB (§6.1)."""
     assert app in HTAP_APPS, app
-    n_queries = int(app.replace("htap", ""))
-    lay = G.make_imdb_layout(scale=scale)
-    base = (seed * 104729) ^ (n_queries << 4)
-    rng = np.random.default_rng(base)              # kernel structure
-    rng_w = np.random.default_rng(base ^ 0xBEEF)   # txn writes + bursts
-    rng_r = np.random.default_rng(base ^ 0xFACE)   # txn reads
-
-    num_windows = num_kernels * windows_per_kernel
-    tuples_per_table = int(G.IMDB_SHAPE["tuples_per_table"] * scale)
-
-    pim_reads = np.full((num_windows, AR), -1, dtype=np.int32)
-    pim_writes = np.full((num_windows, AW), -1, dtype=np.int32)
-    cpu_reads = np.full((num_windows, BR), -1, dtype=np.int32)
-    cpu_writes = np.full((num_windows, BW), -1, dtype=np.int32)
-    pre_writes = np.zeros((num_kernels, lay.total_lines), dtype=bool)
-
-    txn_writes = 2
-    txn_reads = 26
-    scan_bias = 0.4   # fraction of txn writes landing in the scanned table
-    analytics_intensity = n_queries / 128.0
-
-    def rand_tuple_lines(gen, n, table=None):
-        if table is None:
-            t = gen.integers(0, lay.tables, n)
-        else:
-            t = np.full((n,), table)
-        tup = gen.integers(0, tuples_per_table, n)
-        fld = gen.integers(0, lay.tuple_lines, n)
-        return lay.tuple_line(t, tup, fld).astype(np.int32)
-
-    # Stable hot-tuple pool for the (cache-resident) transactional reads.
-    read_pool = rand_tuple_lines(rng_r, 500)
-
-    w = 0
-    for k in range(num_kernels):
-        table = int(rng.integers(0, lay.tables))
-        scan_cursor = int(rng.integers(0, max(1, tuples_per_table - 1)))
-        # Inter-kernel txn-commit burst: dirty tuples across tables, biased
-        # toward the (hot) table the next analytical batch will scan.
-        n_burst = 8
-        n_hot_burst = 3
-        burst = np.concatenate([
-            rand_tuple_lines(rng_w, n_hot_burst, table=table),
-            rand_tuple_lines(rng_w, n_burst - n_hot_burst),
-        ])
-        pre_writes[k, burst] = True
-
-        for _ in range(windows_per_kernel):
-            # select scan: sequential tuple lines from the scanned table
-            # (windows close on the instruction cap, §5.4)
-            n_scan = 35
-            tup = (scan_cursor + np.arange(n_scan) // lay.tuple_lines) % tuples_per_table
-            fld = np.arange(n_scan) % lay.tuple_lines
-            scan_lines = lay.tuple_line(np.full(n_scan, table), tup, fld)
-            scan_cursor = (scan_cursor + n_scan // lay.tuple_lines) % tuples_per_table
-            # join probes: random reads in the hash area
-            n_probe = 12
-            probe_lines = lay.hash_base + rng.integers(0, lay.hash_area_lines, n_probe)
-            reads = np.concatenate([scan_lines, probe_lines]).astype(np.int32)
-            # join build/output writes into the hash area
-            n_wr = max(8, int(40 * analytics_intensity))
-            writes = (lay.hash_base + rng.integers(0, lay.hash_area_lines, n_wr)).astype(np.int32)
-            pim_reads[w] = _pad(reads, AR)
-            pim_writes[w] = _pad(writes, AW)
-
-            # Transactions: a few tuple touches; writes biased to hot table.
-            n_hot = int(round(txn_writes * scan_bias))
-            t_w_lines = np.concatenate([
-                rand_tuple_lines(rng_w, n_hot, table=table),
-                rand_tuple_lines(rng_w, txn_writes - n_hot),
-            ])
-            t_r_lines = rng_r.choice(read_pool, size=txn_reads)
-            cpu_writes[w] = _pad(t_w_lines, BW)
-            cpu_reads[w] = _pad(t_r_lines, BR)
-            w += 1
-
-    n_pim_acc = (pim_reads >= 0).sum(1) + (pim_writes >= 0).sum(1)
-    n_cpu_acc = (cpu_reads >= 0).sum(1) + (cpu_writes >= 0).sum(1)
-    kernel_id = np.repeat(np.arange(num_kernels, dtype=np.int32), windows_per_kernel)
-    kernel_start = np.zeros((num_windows,), dtype=bool)
-    kernel_start[::windows_per_kernel] = True
-    kernel_end = np.zeros((num_windows,), dtype=bool)
-    kernel_end[windows_per_kernel - 1 :: windows_per_kernel] = True
-
-    return WindowTrace(
-        name=app,
-        threads=threads,
-        num_lines=lay.total_lines,
-        pim_reads=pim_reads,
-        pim_writes=pim_writes,
-        cpu_reads=cpu_reads,
-        cpu_writes=cpu_writes,
-        kernel_id=kernel_id,
-        kernel_start=kernel_start,
-        kernel_end=kernel_end,
-        pre_writes=pre_writes,
-        pim_instr=(n_pim_acc * (2.5 + 1.5 * analytics_intensity)).astype(np.float32),
-        cpu_instr=(n_cpu_acc * cpu_reuse * 12.0 + threads * 500.0).astype(np.float32),
-        cpu_priv_accesses=np.full((num_windows,), threads * 220.0, np.float32),
-        cpu_priv_miss_rate=0.0015,
-        cpu_reuse=cpu_reuse,
-    )
+    return make_trace(app, None, threads=threads, seed=seed,
+                      num_kernels=num_kernels,
+                      windows_per_kernel=windows_per_kernel, scale=scale,
+                      cpu_reuse=cpu_reuse, backend=backend)
 
 
-def make_trace(app: str, graph_name: str | None = None, threads: int = 16, seed: int = 0, **kw) -> WindowTrace:
-    """Uniform entry point: graph apps need ``graph_name``; HTAP apps don't."""
-    if app in GRAPH_APPS:
-        assert graph_name in GRAPH_INPUTS, graph_name
-        return make_graph_trace(app, graph_name, threads=threads, seed=seed, **kw)
-    return make_htap_trace(app, threads=threads, seed=seed, **kw)
-
-
-def all_workloads() -> list[tuple[str, str | None]]:
-    """The paper's 12 evaluated (app, input) pairs (Fig. 7)."""
+def all_workloads(extended: bool = False) -> list[tuple[str, str | None]]:
+    """The paper's 12 evaluated (app, input) pairs (Fig. 7); with
+    ``extended=True``, also the new families (frontier kernels on every
+    graph input, streaming-ingest HTAP, multi-tenant mixes)."""
     out: list[tuple[str, str | None]] = [
         (a, g) for a in GRAPH_APPS for g in GRAPH_INPUTS
     ]
     out += [(a, None) for a in HTAP_APPS]
+    if extended:
+        out += [(a, g) for a in FRONTIER_APPS for g in GRAPH_INPUTS]
+        out += [(a, None) for a in STREAM_APPS]
+        out += [(a, g) for a in MT_APPS for g in GRAPH_INPUTS]
     return out

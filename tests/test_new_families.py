@@ -1,0 +1,75 @@
+"""The new workload families reproduce the paper's qualitative mechanism
+ordering under the default ``HWParams``:
+
+    ideal >= lazypim >= {fg, cg},   nc worst on reuse-heavy mixes
+
+(§7: LazyPIM outperforms both prior coherence approaches and sits within
+~10 % of ideal; NC loses exactly where the processor re-reads hot PIM data
+— the streaming-ingest tail and the multi-tenant bookkeeping pools.)
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.sim.costmodel import HWParams
+from repro.sim.engine import run_all, summarize
+from repro.sim.prep import prepare
+from repro.sim.trace import make_trace
+
+HW = HWParams()
+
+# One full-scale representative per new family axis; reuse-heavy mixes
+# (where NC must come out worst) marked.
+CASES = (
+    ("bfs", "arxiv", False),
+    ("sssp", "gnutella", False),
+    ("htap_stream", None, True),
+    ("mtmix", "arxiv", True),
+)
+
+
+@pytest.fixture(scope="module", params=CASES, ids=lambda c: f"{c[0]}-{c[1]}")
+def case(request):
+    app, graph, reuse_heavy = request.param
+    tt = prepare(make_trace(app, graph, threads=16))
+    return summarize(run_all(tt, HW), HW), reuse_heavy, tt.name
+
+
+def test_paper_qualitative_ordering(case):
+    s, _, name = case
+    lz = s["lazypim"]["speedup"]
+    assert s["ideal"]["speedup"] >= lz, name
+    assert lz >= s["fg"]["speedup"], name
+    assert lz >= s["cg"]["speedup"], name
+
+
+def test_nc_worst_on_reuse_heavy(case):
+    s, reuse_heavy, name = case
+    if not reuse_heavy:
+        pytest.skip("ordering-only case")
+    nc = s["nc"]["speedup"]
+    for m in ("cpu", "fg", "cg", "lazypim", "ideal"):
+        assert nc < s[m]["speedup"], f"{name}: nc not worst vs {m}"
+
+
+def test_lazypim_within_gap_of_ideal(case):
+    """The new families stay in the paper's regime: LazyPIM lands within
+    25 % of the zero-cost-coherence upper bound."""
+    s, _, name = case
+    assert 1 - s["lazypim"]["speedup"] / s["ideal"]["speedup"] < 0.25, name
+
+
+def test_multi_tenant_signature_pressure():
+    """mtmix's point: the inactive tenant's concurrent writes exert
+    CPUWriteSet pressure on the active kernel.  With both tenants' threads
+    live, conflicts must exceed a single-tenant baseline trace of the same
+    geometry (tenant A alone ~= pagerank, whose conflict rate is near 0)."""
+    from repro.core.coherence import LazyPIMConfig, simulate_lazypim
+
+    tt = prepare(make_trace("mtmix", "gnutella", threads=16))
+    r = simulate_lazypim(tt, HW, LazyPIMConfig())
+    assert r.conflicts_sig > 0
+    # signature-detected conflicts include cross-tenant H3 false positives:
+    # the sig rate can only be >= the exact-RAW rate
+    assert r.conflicts_sig >= r.conflicts_exact

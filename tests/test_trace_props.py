@@ -1,0 +1,141 @@
+"""Property tests for trace invariants, across ALL workload families.
+
+Runs under real ``hypothesis`` when installed (the CI hypothesis job) and
+under the seeded shim (``tests/_fallback_hypothesis.py``) otherwise.
+Invariants, for every family × seed × thread count drawn:
+
+* padded-slot sentinel correctness: every access slot is either the -1
+  sentinel or a line id inside the PIM data region;
+* per-window signature-insertion count <= MAX_SIG_ADDRS (§5.4: a partial
+  kernel closes at 250 inserted addresses per set);
+* pre-write sets live inside the region — after ``prepare()`` the packed
+  ``pre_writes_words`` pad bits (beyond ``num_lines``) are all zero;
+* determinism under a fixed seed (counter-based draws have no sequence
+  state to leak between calls);
+* ``prepare()`` round-trip: packed words ↔ boolean bitmaps ↔ id lists.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _fallback_hypothesis import given, settings, st
+
+from repro.sim import prep as P
+from repro.sim.prep import prepare
+from repro.sim.trace import MAX_SIG_ADDRS, make_trace
+
+# One representative per family: seed graph, seed HTAP, frontier (both
+# apps), streaming-ingest, multi-tenant.
+FAMILY_CASES = (
+    ("components", "arxiv"),
+    ("htap192", None),
+    ("bfs", "arxiv"),
+    ("sssp", "gnutella"),
+    ("htap_stream", None),
+    ("mtmix", "arxiv"),
+)
+
+
+def _small_trace(case_idx: int, seed: int, threads: int):
+    app, graph = FAMILY_CASES[case_idx % len(FAMILY_CASES)]
+    kw = dict(threads=threads, seed=seed, num_kernels=3, windows_per_kernel=2)
+    if graph is not None:
+        kw["scale"] = 0.25
+    else:
+        kw["scale"] = 0.004
+    return make_trace(app, graph, **kw)
+
+
+@settings(max_examples=12, deadline=None)
+@given(case=st.integers(0, len(FAMILY_CASES) - 1),
+       seed=st.integers(0, 2 ** 16),
+       tsel=st.integers(0, 1))
+def test_trace_invariants(case, seed, tsel):
+    threads = (4, 16)[tsel]
+    tr = _small_trace(case, seed, threads)
+    n = tr.num_lines
+
+    for name in ("pim_reads", "pim_writes", "cpu_reads", "cpu_writes"):
+        ids = np.asarray(getattr(tr, name))
+        assert ids.dtype == np.int32, name
+        # padded-slot sentinel correctness: -1 or an in-region line id
+        assert np.all((ids == -1) | ((ids >= 0) & (ids < n))), \
+            f"{tr.name}.{name}: slot outside [-1] ∪ [0, {n})"
+
+    # per-window insertion counts stay under the §5.4 signature cap
+    for name in ("pim_reads", "pim_writes"):
+        ids = np.asarray(getattr(tr, name))
+        for row in ids:
+            assert len(np.unique(row[row >= 0])) <= MAX_SIG_ADDRS, name
+
+    # pre-writes: boolean rows over exactly the region's lines
+    pre = np.asarray(tr.pre_writes)
+    assert pre.shape == (tr.num_kernels, n)
+    assert pre.dtype == bool
+    assert pre.any(axis=1).all(), "a kernel with an empty inter-kernel phase"
+
+    # kernel structure is consistent
+    kid = np.asarray(tr.kernel_id)
+    assert kid.min() == 0 and kid.max() == tr.num_kernels - 1
+    assert np.asarray(tr.kernel_start).sum() == tr.num_kernels
+    assert np.asarray(tr.kernel_end).sum() == tr.num_kernels
+
+    # determinism under a fixed seed (no hidden sequential state)
+    again = _small_trace(case, seed, threads)
+    for name in ("pim_reads", "cpu_writes", "pre_writes", "cpu_instr"):
+        np.testing.assert_array_equal(np.asarray(getattr(tr, name)),
+                                      np.asarray(getattr(again, name)))
+
+
+@settings(max_examples=6, deadline=None)
+@given(case=st.integers(0, len(FAMILY_CASES) - 1),
+       seed=st.integers(0, 2 ** 16))
+def test_prepare_round_trip(case, seed):
+    """prepare() stages the trace without altering its content: packed
+    words unpack back to the boolean bitmaps, validity masks mirror the -1
+    sentinels, and the unique-line counts match a direct recount."""
+    tr = _small_trace(case, seed, 16)
+    tt = prepare(tr)
+    n = tr.num_lines
+
+    # packed pre-writes ↔ boolean pre-writes, pad bits zero
+    words = np.asarray(tt.pre_writes_words)
+    np.testing.assert_array_equal(
+        np.asarray(P.unpack_bitmap(tt.pre_writes_words, n)),
+        np.asarray(tr.pre_writes))
+    pad = tt.num_line_words * 32 - n
+    if pad:
+        assert np.all(words[:, -1] >> np.uint32(32 - pad) == 0), \
+            "pre-write set leaks into the packed pad region"
+
+    # validity masks ↔ sentinel slots; ids staged unchanged
+    for ids_name, valid_name in (("pim_reads", "pim_r_valid"),
+                                 ("pim_writes", "pim_w_valid"),
+                                 ("cpu_reads", "cpu_r_valid"),
+                                 ("cpu_writes", "cpu_w_valid")):
+        ids = np.asarray(getattr(tr, ids_name))
+        np.testing.assert_array_equal(np.asarray(getattr(tt, ids_name)), ids)
+        np.testing.assert_array_equal(np.asarray(getattr(tt, valid_name)),
+                                      ids >= 0)
+
+    # unique-line counts (locality-model inputs) match a direct recount
+    pr = np.asarray(tr.pim_reads)
+    pw = np.asarray(tr.pim_writes)
+    np.testing.assert_array_equal(np.asarray(tt.pim_uniq_r), P._uniq_count_loop(pr))
+    np.testing.assert_array_equal(np.asarray(tt.pim_uniq_w), P._uniq_count_loop(pw))
+    np.testing.assert_array_equal(np.asarray(tt.pim_uniq),
+                                  P._uniq_union_count_loop(pr, pw))
+
+
+def test_max_sig_addrs_is_enforced_at_full_scale():
+    """The §5.4 cap holds on a full-scale trace of the densest new family
+    (bursty BFS peak windows are the widest read sets we generate)."""
+    tr = make_trace("bfs", "enron", threads=16)
+    reads = np.asarray(tr.pim_reads)
+    uniq = P._uniq_count(reads)
+    assert uniq.max() <= MAX_SIG_ADDRS
