@@ -1,6 +1,12 @@
 """Packed-word simulator core + single-compile sweep microbenchmarks.
 
-Three measurements, written to ``BENCH_engine.json`` at the repo root:
+Measurements, written to ``BENCH_engine.json`` at the repo root:
+
+0. **Geometry-bucketed batch engine** (``batch_engine``) — the full
+   extended fig7 fleet through three engines with measured compile counts:
+   the pre-batching per-workload-jit path (one compile per workload ×
+   mechanism), the sequential geometry-keyed path, and ``run_batch`` (one
+   compile per (mechanism, bucket), ≤ ``FLEET_COMPILE_BUDGET``).
 
 1. **Per-mechanism steady state** — windows/sec of every mechanism's window
    scan on the packed uint32-word path (``repro.core.mechanisms`` /
@@ -37,9 +43,21 @@ from repro.core.coherence import LazyPIMConfig, _lazypim_acc
 from repro.core.mechanisms import ACC_FNS
 from repro.sim import _traceref, engine, synth
 from repro.sim.costmodel import HWParams
-from repro.sim.engine import run_sweep, stack_hw, stack_traces, summarize
+from repro.sim.engine import (
+    batch_plan,
+    run_all,
+    run_batch,
+    run_sweep,
+    sequential_cache_sizes,
+    stack_hw,
+    stack_traces,
+    summarize,
+    sweep_cache_sizes,
+)
 from repro.sim.prep import prepare
 from repro.sim.trace import all_workloads, build_plan, make_trace
+
+from benchmarks.check_budget import FLEET_COMPILE_BUDGET  # single source
 
 STEADY_WORKLOADS = (("pagerank", "arxiv"), ("htap128", None))
 SWEEP_POINTS = 4
@@ -98,7 +116,8 @@ def bench_mechanisms(hw: HWParams, cfg: LazyPIMConfig) -> dict:
 
 def bench_fig7_wall(hw: HWParams) -> dict:
     """Full extended fig7 matrix (22 workloads × 6 mechanisms, incl. trace
-    generation, prepare and compiles) — packed vs the boolean seed path.
+    generation, prepare and compiles) — the packed path (now the bucketed
+    batch engine via ``fig7_speedup.run``) vs the boolean seed path.
     NOTE: recorded under ``fig7_end_to_end_extended`` — PR 2's
     ``fig7_end_to_end`` measured the 12-workload paper set, a different
     quantity (the extended matrix adds ~3 trace geometries of scan
@@ -116,7 +135,10 @@ def bench_fig7_wall(hw: HWParams) -> dict:
     bool_s = time.perf_counter() - t0
     return {"workloads": len(all_workloads(extended=True)),
             "packed_s": packed_s, "bool_s": bool_s,
-            "speedup": bool_s / packed_s}
+            "speedup": bool_s / packed_s,
+            "note": "packed side runs the bucketed batch engine with scan "
+                    "compiles warm from the batch_engine section (which "
+                    "records the cold-compile walls)"}
 
 
 def bench_sweep(hw: HWParams, cfg: LazyPIMConfig) -> dict:
@@ -167,6 +189,80 @@ def bench_sweep(hw: HWParams, cfg: LazyPIMConfig) -> dict:
     }
 
 
+def bench_batch_engine(hw: HWParams, cfg: LazyPIMConfig) -> dict:
+    """Geometry-bucketed batch engine on the full extended fig7 fleet
+    (22 workloads × 6 mechanisms), three walls with *measured* compiles:
+
+    * ``per_workload_jit`` — the pre-batching behavior, reproduced
+      faithfully: workload ``name``/``threads`` are static pytree metadata,
+      so every workload recompiled every mechanism (fresh jit wrappers +
+      named traces — what the committed 162 s fig7 wall was made of);
+    * ``sequential`` — post-PR ``run_all``: ``neutral_trace`` keys the jit
+      cache on geometry, one compile per (mechanism, geometry);
+    * ``batched`` — ``run_batch``: one compile per (mechanism, bucket),
+      whole fleet vmapped over the stacked workload axis.
+
+    Runs FIRST in the bench (cold jit caches) so the compile counts are the
+    fleet's, not leftovers from other sections.  End-to-end walls add the
+    shared trace-generation + prepare time to each engine's sim wall.
+    """
+    pairs = all_workloads(extended=True)
+    t0 = time.perf_counter()
+    tts = [prepare(make_trace(a, g, threads=16)) for a, g in pairs]
+    prep_s = time.perf_counter() - t0
+
+    # --- before: one jit entry per (workload, mechanism), as pre-PR -------
+    named_fns = {m: jax.jit(fn) for m, fn in ACC_FNS.items()}
+    named_fns["lazypim"] = jax.jit(_lazypim_acc)
+    t0 = time.perf_counter()
+    for tt in tts:
+        for m, fn in named_fns.items():
+            args = (tt, hw, cfg) if m == "lazypim" else (tt, hw)
+            jax.block_until_ready(fn(*args))
+    per_workload_s = time.perf_counter() - t0
+    per_workload_compiles = sum(f._cache_size() for f in named_fns.values())
+
+    # --- sequential run_all (geometry-keyed compiles) ---------------------
+    seq_before = sequential_cache_sizes()
+    t0 = time.perf_counter()
+    for tt in tts:
+        run_all(tt, hw, lazy_cfg=cfg)
+    seq_s = time.perf_counter() - t0
+    seq_after = sequential_cache_sizes()
+    seq_compiles = sum(seq_after[m] - seq_before[m] for m in seq_after)
+
+    # --- batched run_batch (bucket-keyed compiles) ------------------------
+    bat_before = sweep_cache_sizes()
+    t0 = time.perf_counter()
+    run_batch(tts, hw, lazy_cfg=cfg)
+    bat_s = time.perf_counter() - t0
+    bat_after = sweep_cache_sizes()
+    bat_per_mech = {m: bat_after[m] - bat_before[m] for m in bat_after}
+    bat_compiles = sum(bat_per_mech.values())
+
+    return {
+        "workloads": len(pairs),
+        "mechanisms": 6,
+        "trace_gen_prepare_s": prep_s,
+        "buckets": batch_plan(tts),
+        "per_workload_jit": {"sim_wall_s": per_workload_s,
+                             "end_to_end_s": prep_s + per_workload_s,
+                             "measured_compiles": per_workload_compiles},
+        "sequential": {"sim_wall_s": seq_s,
+                       "end_to_end_s": prep_s + seq_s,
+                       "measured_compiles": seq_compiles},
+        "batched": {"sim_wall_s": bat_s,
+                    "end_to_end_s": prep_s + bat_s,
+                    "measured_compiles": bat_compiles,
+                    "measured_compiles_per_mechanism": bat_per_mech},
+        "compile_budget": FLEET_COMPILE_BUDGET,
+        "within_budget": bat_compiles <= FLEET_COMPILE_BUDGET,
+        "fig7_wall_reduction_vs_per_workload_jit":
+            (prep_s + per_workload_s) / (prep_s + bat_s),
+        "fig7_wall_reduction_vs_sequential": (prep_s + seq_s) / (prep_s + bat_s),
+    }
+
+
 def bench_trace_synth() -> dict:
     """On-device jit generation vs the sequential numpy reference, per
     family; steady state = min over samples, compile + one warm call
@@ -211,6 +307,8 @@ def run() -> dict:
     hw, cfg = HWParams(), LazyPIMConfig()
     return {
         "backend": jax.default_backend(),
+        # batch_engine runs FIRST: its compile counts need cold jit caches.
+        "batch_engine": bench_batch_engine(hw, cfg),
         "steady_state": bench_mechanisms(hw, cfg),
         "fig7_end_to_end_extended": bench_fig7_wall(hw),
         "hw_sweep": bench_sweep(hw, cfg),
@@ -221,6 +319,13 @@ def run() -> dict:
 def main():
     results = run()
     out_path = write_bench_json("engine", results)
+    be = results["batch_engine"]
+    print(f"batch_engine,buckets,{len(be['buckets'])},compiles,"
+          f"{be['batched']['measured_compiles']},budget,{be['compile_budget']},"
+          f"e2e_before_s,{be['per_workload_jit']['end_to_end_s']:.1f},"
+          f"e2e_seq_s,{be['sequential']['end_to_end_s']:.1f},"
+          f"e2e_batched_s,{be['batched']['end_to_end_s']:.1f},"
+          f"reduction,{be['fig7_wall_reduction_vs_per_workload_jit']:.2f}x")
     for name, wl in results["steady_state"].items():
         for mech, r in wl["mechanisms"].items():
             print(f"{name},{mech},packed_ms,{r['packed_ms']:.2f},bool_ms,"

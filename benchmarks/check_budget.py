@@ -1,0 +1,62 @@
+"""CI gate: the committed ``BENCH_engine.json`` must carry a
+``batch_engine`` section whose *measured* fleet compile count is within the
+batch engine's budget (one compile per (mechanism, geometry bucket) — see
+``benchmarks.bench_engine.FLEET_COMPILE_BUDGET``).
+
+Exits non-zero if the section is missing or over budget, so a regression
+that silently multiplies compiles (a new static jit key, a bucketing
+change that splinters the fleet) fails the pipeline even though the
+benchmark itself runs on the reference container, not in CI.  The live
+counterpart — asserted on every tier-1 run — is
+``tests/test_batch_engine.py::test_fleet_buckets_and_compile_budget``.
+
+Usage: python -m benchmarks.check_budget [path-to-BENCH_engine.json]
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+# THE fleet compile budget: 6 mechanisms × ≤3 geometry buckets for the full
+# extended fig7 suite.  Single source of truth — bench_engine embeds it in
+# the JSON record and the gate below enforces it against the measurement;
+# tests/test_batch_engine.py asserts the structural form (≤ 1 compile per
+# (mechanism, bucket)) live on every tier-1 run.
+FLEET_COMPILE_BUDGET = 18
+
+
+def main(argv: list[str]) -> int:
+    path = pathlib.Path(argv[1]) if len(argv) > 1 else \
+        pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
+    try:
+        record = json.loads(path.read_text())
+    except FileNotFoundError:
+        print(f"check_budget: {path} not found", file=sys.stderr)
+        return 1
+    section = record.get("batch_engine")
+    if not section:
+        print(f"check_budget: no batch_engine section in {path}",
+              file=sys.stderr)
+        return 1
+    compiles = section["batched"]["measured_compiles"]
+    buckets = len(section.get("buckets", []))
+    print(f"check_budget: {compiles} measured compiles for "
+          f"{section['workloads']} workloads x {section['mechanisms']} "
+          f"mechanisms in {buckets} buckets (budget {FLEET_COMPILE_BUDGET})")
+    if section.get("compile_budget") != FLEET_COMPILE_BUDGET:
+        print(f"check_budget: committed record embeds budget "
+              f"{section.get('compile_budget')} != source-of-truth "
+              f"{FLEET_COMPILE_BUDGET} — regenerate BENCH_engine.json",
+              file=sys.stderr)
+        return 1
+    if compiles > FLEET_COMPILE_BUDGET:
+        print(f"check_budget: OVER BUDGET ({compiles} > "
+              f"{FLEET_COMPILE_BUDGET})", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -6,8 +6,9 @@ printed for reference; synthesized traces keep per-window access patterns
 thread-invariant (threads scale instruction counts), so the paper's
 superlinear flush growth is out of this harness's scope.
 
-Shares fig8's single-compile sweep: one batched execution over the stacked
-thread-count axis (``repro.sim.engine.run_sweep``)."""
+Shares fig8's batched sweep: one compiled, vmapped execution over the
+stacked thread-count axis per (mechanism, bucket)
+(``repro.sim.engine.run_batch`` with a per-point hw list)."""
 
 from benchmarks.fig8_scaling import THREADS, WORKLOADS, sweep_points
 from repro.sim.engine import summarize

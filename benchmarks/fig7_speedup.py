@@ -3,21 +3,30 @@ The paper's 12 workloads validate: Ideal ~ +84% (graphs), FG ~ +38.7%,
 CG ~ -1.4%, NC ~ -3.2%, LazyPIM +19.6% over FG / +66% over CPU.  The
 extended set adds the new families (BFS/SSSP frontier kernels,
 streaming-ingest HTAP, multi-tenant mixes); paper-validation means are
-computed over the paper set only."""
+computed over the paper set only.
+
+Runs on the geometry-bucketed batch engine by default: the whole fleet is
+one compiled, vmapped window scan per (mechanism, bucket) —
+``engine="sequential"`` keeps the per-workload ``run_all`` path (bit-exact
+with the batch path; ``tests/test_batch_engine.py``)."""
 
 from repro.sim.costmodel import HWParams
-from repro.sim.engine import run_all, summarize
+from repro.sim.engine import run_all, run_batch, summarize
 from repro.sim.prep import prepare
 from repro.sim.trace import all_workloads, make_trace
 
 
-def run(threads: int = 16, extended: bool = True):
+def run(threads: int = 16, extended: bool = True, engine: str = "batch"):
     hw = HWParams()
-    rows = {}
-    for app, g in all_workloads(extended=extended):
-        tt = prepare(make_trace(app, g, threads=threads))
-        rows[tt.name] = summarize(run_all(tt, hw), hw)
-    return rows
+    tts = [prepare(make_trace(app, g, threads=threads))
+           for app, g in all_workloads(extended=extended)]
+    if engine == "batch":
+        results = run_batch(tts, hw)
+    elif engine == "sequential":
+        results = [run_all(tt, hw) for tt in tts]
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    return {tt.name: summarize(r, hw) for tt, r in zip(tts, results)}
 
 
 def main():

@@ -3,12 +3,15 @@ each count.  Validates the scaling ORDER: Ideal > LazyPIM > FG > {CG, NC},
 with FG scaling better than CG/NC — on the paper's PageRank-arXiv and on
 the new bursty-frontier family (BFS-arXiv).
 
-Runs on the single-compile sweep path: the three thread counts are stacked
-trace/hardware axes batched through one compiled step per mechanism
-(``repro.sim.engine.run_sweep``) instead of three sequential jit calls."""
+Runs on the fleet batch engine with a per-point hardware axis
+(``repro.sim.engine.run_batch`` with an hw list): the hw × trace
+cross-product — every (workload, thread-count) pair with its matching
+core counts — is one compiled, vmapped window scan per (mechanism,
+geometry bucket), composing the PR-2 hw-axis sweep with the workload
+axis."""
 
 from repro.sim.costmodel import HWParams
-from repro.sim.engine import run_sweep, stack_hw, stack_traces, summarize
+from repro.sim.engine import run_batch, summarize
 from repro.sim.prep import prepare
 from repro.sim.trace import make_trace
 
@@ -17,12 +20,12 @@ WORKLOADS = (("pagerank", "arxiv"), ("bfs", "arxiv"))
 
 
 def sweep_points(app: str = "pagerank", graph: str = "arxiv"):
-    """(points, hws) for one workload swept over THREADS — same-geometry
-    traces stacked through one compiled step per mechanism."""
+    """(points, hws) for one workload swept over THREADS — the thread axis
+    rides the batch engine's stacked workload axis with one HWParams per
+    point (same bit-exact results as the PR-2 ``run_sweep`` path)."""
     hws = [HWParams(cpu_cores=t, pim_cores=t) for t in THREADS]
-    tts = stack_traces([prepare(make_trace(app, graph, threads=t))
-                        for t in THREADS])
-    return run_sweep(tts, stack_hw(hws)), hws
+    tts = [prepare(make_trace(app, graph, threads=t)) for t in THREADS]
+    return run_batch(tts, hws), hws
 
 
 def run():

@@ -63,6 +63,7 @@ from repro.core.mechanisms import (
     _cpu_dyn_count,
     _cpu_compute_ns,
     _f,
+    _mask_step,
     _pim_acc_count,
     _pim_compute_ns,
     _pim_dram_bytes,
@@ -82,6 +83,7 @@ from repro.sim.prep import (
     line_sig_hits,
     line_window_u01,
     members_from_hits,
+    neutral_trace as prep_neutral,
     pack_bitmap,
     popcount_words,
     scatter_set,
@@ -136,6 +138,7 @@ def _lazypim_acc(tt: TraceTensors, hw: HWParams, cfg: LazyPIMConfig):
     dbi_interval_ns = cfg.dbi_interval_cycles / hw.freq_ghz
 
     def step(carry, w):
+        carry_in = carry
         (present, dirty, cpuws, conc, read_bm, read_bits, write_bits,
          replay_ns, dbi_t, acc) = carry
         k = tt.kernel_id[w]
@@ -273,8 +276,9 @@ def _lazypim_acc(tt: TraceTensors, hw: HWParams, cfg: LazyPIMConfig):
         cpuws = jnp.where(commit, jnp.zeros_like(cpuws), cpuws)
         replay_ns = jnp.where(commit, 0.0, replay_ns)
 
-        return (present, dirty, cpuws, conc, read_bm, read_bits, write_bits,
-                replay_ns, dbi_t, acc), None
+        new = (present, dirty, cpuws, conc, read_bm, read_bits, write_bits,
+               replay_ns, dbi_t, acc)
+        return _mask_step(tt, w, carry_in, new), None
 
     acc0 = {k: _f(0) for k in (
         "time_ns", "offchip_bytes", "dram_bytes", "l1_accesses", "l2_accesses",
@@ -295,6 +299,6 @@ def simulate_lazypim(
     tt: TraceTensors, hw: HWParams, cfg: LazyPIMConfig | None = None
 ) -> SimResult:
     cfg = cfg or LazyPIMConfig()
-    acc = _run_lazypim(tt, hw, cfg)
+    acc = _run_lazypim(prep_neutral(tt), hw, cfg)
     return SimResult(name=tt.name, mechanism="lazypim",
                      **{k: float(v) for k, v in acc.items()})

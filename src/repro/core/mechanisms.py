@@ -39,6 +39,7 @@ from repro.sim.prep import (
     TraceTensors,
     cpu_cache_step,
     gather_hits,
+    neutral_trace,
     popcount_words,
     scatter_set,
 )
@@ -97,6 +98,18 @@ class SimResult:
 def _zwords(tt: TraceTensors):
     """Empty packed line bitmap."""
     return jnp.zeros((tt.num_line_words,), dtype=jnp.uint32)
+
+
+def _mask_step(tt: TraceTensors, w, old_carry, new_carry):
+    """Make a window scan step padding-aware: on a window appended by
+    :func:`repro.sim.prep.pad_trace` (``window_valid[w]`` False) the carry —
+    accumulators included — passes through untouched, so padded windows
+    contribute exactly zero to every metric.  On real windows ``where`` is a
+    lane-wise select with a True predicate: bit-exact with the unmasked
+    step."""
+    v = tt.window_valid[w]
+    return jax.tree_util.tree_map(lambda a, b: jnp.where(v, a, b),
+                                  new_carry, old_carry)
 
 
 def _f(x):
@@ -189,8 +202,9 @@ def _cpu_only_acc(tt: TraceTensors, hw: HWParams):
 
         l1_w = _cpu_dyn_count(tt, w) + _pim_acc_count(tt, w) + tt.cpu_priv[w]
         l2_w = out.misses + out.hits + tt.pim_uniq[w]
-        return (out.present, out.dirty, t + t_w, off + off_w, dram + off_w,
-                l1 + l1_w, l2 + l2_w), None
+        new = (out.present, out.dirty, t + t_w, off + off_w, dram + off_w,
+               l1 + l1_w, l2 + l2_w)
+        return _mask_step(tt, w, carry, new), None
 
     init = (_zwords(tt), _zwords(tt),
             _f(0), _f(0), _f(0), _f(0), _f(0))
@@ -204,7 +218,7 @@ _run_cpu_only = jax.jit(_cpu_only_acc)
 
 
 def simulate_cpu_only(tt: TraceTensors, hw: HWParams) -> SimResult:
-    return _finalize(tt, "cpu", _run_cpu_only(tt, hw))
+    return _finalize(tt, "cpu", _run_cpu_only(neutral_trace(tt), hw))
 
 
 # ---------------------------------------------------------------------------
@@ -237,8 +251,9 @@ def _ideal_acc(tt: TraceTensors, hw: HWParams):
 
         l1_w = _cpu_dyn_count(tt, w) + _pim_acc_count(tt, w) + tt.cpu_priv[w]
         l2_w = out.misses + out.hits
-        return (present, dirty, t + t_w, off + off_w, dram + dram_w,
-                l1 + l1_w, l2 + l2_w), None
+        new = (present, dirty, t + t_w, off + off_w, dram + dram_w,
+               l1 + l1_w, l2 + l2_w)
+        return _mask_step(tt, w, carry, new), None
 
     init = (_zwords(tt), _zwords(tt),
             _f(0), _f(0), _f(0), _f(0), _f(0))
@@ -252,7 +267,7 @@ _run_ideal = jax.jit(_ideal_acc)
 
 
 def simulate_ideal(tt: TraceTensors, hw: HWParams) -> SimResult:
-    return _finalize(tt, "ideal", _run_ideal(tt, hw))
+    return _finalize(tt, "ideal", _run_ideal(neutral_trace(tt), hw))
 
 
 # ---------------------------------------------------------------------------
@@ -304,8 +319,9 @@ def _fg_acc(tt: TraceTensors, hw: HWParams):
 
         l1_w = _cpu_dyn_count(tt, w) + _pim_acc_count(tt, w) + tt.cpu_priv[w]
         l2_w = out.misses + out.hits + tt.pim_uniq[w]  # directory lookups
-        return (present, dirty, t + t_w, off + off_w, dram + dram_w,
-                l1 + l1_w, l2 + l2_w), None
+        new = (present, dirty, t + t_w, off + off_w, dram + dram_w,
+               l1 + l1_w, l2 + l2_w)
+        return _mask_step(tt, w, carry, new), None
 
     init = (_zwords(tt), _zwords(tt),
             _f(0), _f(0), _f(0), _f(0), _f(0))
@@ -319,7 +335,7 @@ _run_fg = jax.jit(_fg_acc)
 
 
 def simulate_fg(tt: TraceTensors, hw: HWParams) -> SimResult:
-    return _finalize(tt, "fg", _run_fg(tt, hw))
+    return _finalize(tt, "fg", _run_fg(neutral_trace(tt), hw))
 
 
 # ---------------------------------------------------------------------------
@@ -381,8 +397,9 @@ def _cg_acc(tt: TraceTensors, hw: HWParams):
 
         l1_w = n_dyn + _pim_acc_count(tt, w) + tt.cpu_priv[w]
         l2_w = n_dyn + n_flush  # flush scans + replayed misses
-        return (present, dirty, t + t_w, off + off_w, dram + dram_w,
-                l1 + l1_w, l2 + l2_w, flushed + n_flush, blocked + n_dyn), None
+        new = (present, dirty, t + t_w, off + off_w, dram + dram_w,
+               l1 + l1_w, l2 + l2_w, flushed + n_flush, blocked + n_dyn)
+        return _mask_step(tt, w, carry, new), None
 
     init = (_zwords(tt), _zwords(tt),
             _f(0), _f(0), _f(0), _f(0), _f(0), _f(0), _f(0))
@@ -397,7 +414,7 @@ _run_cg = jax.jit(_cg_acc)
 
 
 def simulate_cg(tt: TraceTensors, hw: HWParams) -> SimResult:
-    return _finalize(tt, "cg", _run_cg(tt, hw))
+    return _finalize(tt, "cg", _run_cg(neutral_trace(tt), hw))
 
 
 # ---------------------------------------------------------------------------
@@ -420,7 +437,8 @@ def _nc_acc(tt: TraceTensors, hw: HWParams):
                   + _priv_fill_bytes(tt, w) + _pim_dram_bytes(tt, w))
         l1_w = _pim_acc_count(tt, w) + tt.cpu_priv[w]  # CPU accesses bypass L1
         l2_w = _f(0)
-        return (t + t_w, off + off_w, dram + dram_w, l1 + l1_w, l2 + l2_w), None
+        new = (t + t_w, off + off_w, dram + dram_w, l1 + l1_w, l2 + l2_w)
+        return _mask_step(tt, w, carry, new), None
 
     init = (_f(0), _f(0), _f(0), _f(0), _f(0))
     (t, off, dram, l1, l2), _ = jax.lax.scan(step, init, jnp.arange(tt.num_windows))
@@ -432,7 +450,7 @@ _run_nc = jax.jit(_nc_acc)
 
 
 def simulate_nc(tt: TraceTensors, hw: HWParams) -> SimResult:
-    return _finalize(tt, "nc", _run_nc(tt, hw))
+    return _finalize(tt, "nc", _run_nc(neutral_trace(tt), hw))
 
 
 # Unjitted window-scan accumulators, keyed by mechanism name — the raw

@@ -26,6 +26,19 @@ select a different compiled function.
 :func:`sweep_cache_sizes` exposes the per-mechanism compile counts so the
 one-compile claim is measured, not inferred
 (``benchmarks/bench_engine.py``).
+
+**Fleets compile per bucket, not per workload.**  :func:`run_batch` runs a
+mixed-geometry workload fleet (e.g. the full fig7 suite from
+``trace.all_workloads(extended=True)``) by grouping traces into pow2-ish
+geometry buckets (:func:`repro.sim.prep.bucket_traces`), padding members
+onto the bucket shape under explicit validity masks, and vmapping the same
+compiled step functions over the stacked workload axis — one XLA compile
+per (mechanism, bucket) instead of one per (mechanism, workload), bit-exact
+with sequential :func:`run_all` on every ``SimResult`` field.  All
+entry points also strip the workload ``name``/``threads`` metadata before
+jit (:func:`repro.sim.prep.neutral_trace`): both are static pytree leaves,
+so pre-batching they silently keyed the jit cache and every *workload*
+recompiled every mechanism even at identical geometry.
 """
 
 from __future__ import annotations
@@ -49,7 +62,14 @@ from repro.core.mechanisms import (
 )
 from repro.core.signatures import SignatureSpec
 from repro.sim.costmodel import HWParams
-from repro.sim.prep import TRACE_DATA_FIELDS, TraceTensors, prepare
+from repro.sim.prep import (
+    TRACE_DATA_FIELDS,
+    TraceTensors,
+    bucket_shapes,
+    bucket_traces,
+    neutral_trace,
+    prepare,
+)
 from repro.sim.trace import WindowTrace, make_trace
 
 MECHANISMS = ("cpu", "fg", "cg", "nc", "lazypim", "ideal")
@@ -106,20 +126,26 @@ def stack_traces(tts: list[TraceTensors]) -> TraceTensors:
     """Stack same-geometry TraceTensors into one pytree with a leading sweep
     axis on every tensor leaf.
 
-    All traces must share geometry metadata (line/window/kernel counts and
-    signature spec — they select the compiled shapes); ``name``/``threads``
-    and the scalar locality constants are taken from the first trace, so
-    only stack traces whose ``cpu_priv_miss_rate``/``cpu_reuse`` agree
-    (checked) — e.g. one workload generated at several thread counts.
+    All traces must share geometry metadata (line/window/kernel counts,
+    access-slot widths and signature spec — they select the compiled
+    shapes); raw mismatched-geometry stacks are rejected with a
+    ``ValueError`` — route mixed fleets through :func:`run_batch`, whose
+    bucketing layer (:func:`repro.sim.prep.bucket_traces`) pads them onto
+    shared bucket shapes first.  ``name``/``threads`` are taken from the
+    first trace; the locality constants (``cpu_reuse``,
+    ``cpu_priv_miss_rate``) are traced scalar leaves and stack per point
+    like every other tensor.
     """
     t0 = tts[0]
     for t in tts[1:]:
         same = (t.num_lines == t0.num_lines and t.num_windows == t0.num_windows
                 and t.num_kernels == t0.num_kernels and t.spec == t0.spec
-                and t.cpu_priv_miss_rate == t0.cpu_priv_miss_rate
-                and t.cpu_reuse == t0.cpu_reuse)
+                and all(getattr(t, k).shape == getattr(t0, k).shape
+                        for k in ("pim_reads", "pim_writes",
+                                  "cpu_reads", "cpu_writes")))
         if not same:
-            raise ValueError(f"cannot stack {t.name}: geometry differs from {t0.name}")
+            raise ValueError(f"cannot stack {t.name}: geometry differs from "
+                             f"{t0.name} (run_batch buckets mixed fleets)")
     fields = {f.name: getattr(t0, f.name) for f in dataclasses.fields(t0)}
     for key in TRACE_DATA_FIELDS:
         fields[key] = jnp.stack([getattr(t, key) for t in tts])
@@ -137,8 +163,25 @@ def _sweep_fn(mechanism: str):
 
 def sweep_cache_sizes(mechanisms: tuple[str, ...] = MECHANISMS) -> dict[str, int]:
     """Measured XLA compile count per mechanism's sweep function (0 if the
-    sweep function has never run)."""
+    sweep function has never run).  :func:`run_batch` executes through the
+    same functions, so for a bucketed fleet run the delta of these counts is
+    the batch engine's measured compile cost."""
     return {m: _sweep_fn(m)._cache_size() for m in mechanisms}
+
+
+def sequential_cache_sizes(
+    mechanisms: tuple[str, ...] = MECHANISMS,
+) -> dict[str, int]:
+    """Measured XLA compile count of the *sequential* per-trace jits behind
+    :func:`run_all` (one entry per distinct geometry since
+    ``neutral_trace``; one per workload before it)."""
+    from repro.core import coherence as _coh
+    from repro.core import mechanisms as _mech
+
+    jits = {"cpu": _mech._run_cpu_only, "ideal": _mech._run_ideal,
+            "fg": _mech._run_fg, "cg": _mech._run_cg, "nc": _mech._run_nc,
+            "lazypim": _coh._run_lazypim}
+    return {m: jits[m]._cache_size() for m in mechanisms}
 
 
 def run_sweep(
@@ -159,11 +202,12 @@ def run_sweep(
     if not mechanisms:
         return []
     lazy_cfg = lazy_cfg or LazyPIMConfig()
+    ntt = neutral_trace(tt)  # jit keys on geometry, not the workload name
     num_points = None
     out_by_mech: dict[str, dict] = {}
     for m in mechanisms:
         fn = _sweep_fn(m)
-        acc = fn(tt, hw, lazy_cfg) if m == "lazypim" else fn(tt, hw)
+        acc = fn(ntt, hw, lazy_cfg) if m == "lazypim" else fn(ntt, hw)
         acc = {k: jax.device_get(v) for k, v in acc.items()}
         num_points = len(next(iter(acc.values())))
         out_by_mech[m] = acc
@@ -174,6 +218,77 @@ def run_sweep(
             for m, acc in out_by_mech.items()
         })
     return points
+
+
+# ---------------------------------------------------------------------------
+# Geometry-bucketed fleet batch engine
+# ---------------------------------------------------------------------------
+
+
+def run_batch(
+    tts: list[TraceTensors],
+    hw: HWParams | list[HWParams] | None = None,
+    mechanisms: tuple[str, ...] = MECHANISMS,
+    lazy_cfg: LazyPIMConfig | None = None,
+) -> list[dict[str, SimResult]]:
+    """Run a whole workload fleet with one compiled scan per (mechanism,
+    geometry bucket).
+
+    The fleet is grouped by :func:`repro.sim.prep.bucket_traces` (pow2-ish
+    line-count buckets; windows/kernels/slot widths padded to per-bucket
+    maxima under explicit validity masks), each bucket is stacked along a
+    leading workload axis and executed through the same jitted+vmapped step
+    functions :func:`run_sweep` uses — so the measured compile count
+    (:func:`sweep_cache_sizes`) is at most ``len(mechanisms) × num_buckets``
+    for any fleet size.  Results come back per input workload, in input
+    order, and are bit-exact with sequential :func:`run_all` on every
+    ``SimResult`` field (differentially tested in
+    ``tests/test_batch_engine.py``).
+
+    ``hw`` is one HWParams applied fleet-wide, or a list aligned with
+    ``tts`` (one per workload) — the hook that composes the hw-axis sweep
+    with the workload axis: an hw × workload cross-product is expressed by
+    repeating the fleet per hw point, still one compile per (mechanism,
+    bucket).
+    """
+    if not tts:
+        return []
+    if hw is None or isinstance(hw, HWParams):
+        hws = [hw or HWParams()] * len(tts)
+    else:
+        hws = list(hw)
+        if len(hws) != len(tts):
+            raise ValueError(f"hw list length {len(hws)} != fleet size {len(tts)}")
+    lazy_cfg = lazy_cfg or LazyPIMConfig()
+    results: list[dict[str, SimResult]] = [{} for _ in tts]
+    for idx, padded in bucket_traces(tts):
+        stacked = neutral_trace(stack_traces(padded))
+        shw = stack_hw([hws[i] for i in idx])
+        for m in mechanisms:
+            fn = _sweep_fn(m)
+            acc = fn(stacked, shw, lazy_cfg) if m == "lazypim" else fn(stacked, shw)
+            acc = {k: jax.device_get(v) for k, v in acc.items()}
+            for j, i in enumerate(idx):
+                results[i][m] = SimResult(
+                    name=tts[i].name, mechanism=m,
+                    **{k: float(v[j]) for k, v in acc.items()})
+    return results
+
+
+def batch_plan(tts: list[TraceTensors]) -> list[dict]:
+    """Human-readable bucket summary for a fleet (benchmarks / ROADMAP):
+    per bucket the padded geometry, member count and padding overhead.
+    Shape-only — no padded trace is materialized."""
+    plan = []
+    for idx, shape in bucket_shapes(tts):
+        real = sum(tts[i].num_lines for i in idx)
+        plan.append(dict(
+            num_lines=shape["num_lines"], num_windows=shape["num_windows"],
+            num_kernels=shape["num_kernels"],
+            workloads=[tts[i].name for i in idx],
+            line_pad_overhead=shape["num_lines"] * len(idx) / max(real, 1),
+        ))
+    return plan
 
 
 def summarize(results: dict[str, SimResult], hw: HWParams) -> dict[str, dict]:

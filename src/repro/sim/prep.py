@@ -44,6 +44,16 @@ on the ``*_bool`` path.
 
 Everything is bit-exact with :mod:`repro.core.signatures` (same H3 matrices);
 the simulator's false positives are *actual* hash collisions.
+
+**Geometry bucketing (the fleet batch engine's prep layer).**  A whole
+workload fleet runs through a handful of compiled scans instead of one per
+geometry: :func:`bucket_bound` rounds line counts up pow2-ish,
+:func:`pad_trace` pads a prepared trace to a bucket shape under explicit
+validity (padded lines never enter a bitmap or signature, padded windows
+are marked in ``window_valid`` and leave every scan carry untouched), and
+:func:`bucket_traces` groups a fleet into those buckets —
+``repro.sim.engine.run_batch`` vmaps one compiled scan per (mechanism,
+bucket) over the stacked workload axis, bit-exact with the sequential path.
 """
 
 from __future__ import annotations
@@ -85,14 +95,18 @@ def line_window_u01(
 
 # Static metadata vs tensor leaves of TraceTensors — the single source of
 # truth for both the pytree registration and engine.stack_traces.
+# ``cpu_priv_miss_rate``/``cpu_reuse`` are *traced* scalar leaves (not
+# static): workloads that differ only in their locality constants share one
+# compiled step and can ride in one geometry bucket (engine.run_batch).
 TRACE_META_FIELDS = ("name", "threads", "num_lines", "num_windows",
-                     "num_kernels", "spec", "cpu_priv_miss_rate", "cpu_reuse")
+                     "num_kernels", "spec")
 TRACE_DATA_FIELDS = ("line_pos", "line_reg", "pim_reads", "pim_writes",
                      "cpu_reads", "cpu_writes", "pim_r_valid", "pim_w_valid",
                      "cpu_r_valid", "cpu_w_valid", "kernel_id", "kernel_start",
                      "kernel_end", "pre_writes", "pre_writes_words",
                      "pim_instr", "cpu_instr", "cpu_priv", "pim_uniq_r",
-                     "pim_uniq_w", "pim_uniq")
+                     "pim_uniq_w", "pim_uniq", "cpu_priv_miss_rate",
+                     "cpu_reuse", "window_valid")
 
 
 @functools.partial(
@@ -137,13 +151,18 @@ class TraceTensors:
     pim_instr: jax.Array     # (W,) f32
     cpu_instr: jax.Array     # (W,) f32
     cpu_priv: jax.Array      # (W,) f32
-    cpu_priv_miss_rate: float
-    cpu_reuse: float
+    cpu_priv_miss_rate: jax.Array  # () f32 traced scalar
+    cpu_reuse: jax.Array           # () f32 traced scalar
 
     # Unique-line counts per window (locality model inputs)
     pim_uniq_r: jax.Array    # (W,) f32
     pim_uniq_w: jax.Array    # (W,) f32
     pim_uniq: jax.Array      # (W,) f32 (reads ∪ writes)
+
+    # Padding validity: False marks windows appended by :func:`pad_trace`.
+    # Every mechanism step passes its carry through unchanged (and
+    # accumulates nothing) on an invalid window.
+    window_valid: jax.Array  # (W,) bool
 
     @property
     def sig_bits(self) -> int:
@@ -668,9 +687,165 @@ def prepare(trace: WindowTrace, spec: SignatureSpec | None = None) -> TraceTenso
         pim_instr=dev(trace.pim_instr, jnp.float32),
         cpu_instr=dev(trace.cpu_instr, jnp.float32),
         cpu_priv=dev(trace.cpu_priv_accesses, jnp.float32),
-        cpu_priv_miss_rate=float(trace.cpu_priv_miss_rate),
-        cpu_reuse=float(trace.cpu_reuse),
+        cpu_priv_miss_rate=dev(float(trace.cpu_priv_miss_rate), jnp.float32),
+        cpu_reuse=dev(float(trace.cpu_reuse), jnp.float32),
         pim_uniq_r=dev(_uniq_count(pim_reads), jnp.float32),
         pim_uniq_w=dev(_uniq_count(pim_writes), jnp.float32),
         pim_uniq=dev(_uniq_union_count(pim_reads, pim_writes), jnp.float32),
+        window_valid=jnp.ones((trace.num_windows,), dtype=jnp.bool_),
     )
+
+
+def neutral_trace(tt: TraceTensors) -> TraceTensors:
+    """Strip presentation-only metadata (``name``/``threads``) before a jit
+    call.  Both are static pytree metadata, so they key the jit cache: two
+    same-geometry workloads would otherwise compile the identical scan twice
+    (the pre-batching fig7 wall was one XLA compile per *workload* per
+    mechanism, not per geometry).  Results are finalized with the original
+    trace's name by the caller."""
+    if tt.name == "" and tt.threads == 0:
+        return tt
+    return dataclasses.replace(tt, name="", threads=0)
+
+
+# ---------------------------------------------------------------------------
+# Geometry-bucketed padding (the fleet batch engine's prep layer)
+# ---------------------------------------------------------------------------
+
+
+def bucket_bound(n: int) -> int:
+    """Pow2-ish bucket boundary: the smallest power of four >= n.
+
+    Powers of four keep the bucket count low (the fleet's ~8 line-count
+    geometries collapse to ~3 buckets) while bounding padding waste at 4x;
+    plain next-pow2 rounding would leave ~6 buckets for the current fleet.
+    """
+    if n < 1:
+        raise ValueError(f"bucket_bound needs n >= 1, got {n}")
+    b = 1
+    while b < n:
+        b <<= 2
+    return b
+
+
+def pad_trace(
+    tt: TraceTensors,
+    *,
+    num_lines: int | None = None,
+    num_windows: int | None = None,
+    num_kernels: int | None = None,
+    pim_read_slots: int | None = None,
+    pim_write_slots: int | None = None,
+    cpu_read_slots: int | None = None,
+    cpu_write_slots: int | None = None,
+) -> TraceTensors:
+    """Pad a prepared trace up to a bucket geometry, carrying explicit
+    validity so padding cannot perturb any simulated quantity:
+
+    * padded *lines* never enter a bitmap, Bloom image or CPUWriteSet bank —
+      no access slot references them and every packed bitmap keeps its
+      zero-pad invariant, so they are invisible to conflict detection,
+      membership masks and popcounts alike;
+    * padded *access slots* carry the repo-wide ``-1`` sentinel with a False
+      validity mask (identical to the sentinel slots synthesis emits);
+    * padded *windows* are marked invalid in ``window_valid`` — every
+      mechanism step passes its scan carry through unchanged there, so they
+      contribute exactly zero to every accumulator;
+    * padded *kernels* have empty pre-write sets and are never referenced by
+      ``kernel_id``.
+
+    The padded rows of the per-line tables (``line_pos``/``line_reg``) are
+    the real H3 hash positions / register ids those line ids would have, so
+    a padded trace is indistinguishable from a trace prepared at the padded
+    geometry whose extra lines are simply never touched.  Differentially
+    tested bit-exact against the unpadded path on every ``SimResult`` field.
+    """
+    n, n2 = tt.num_lines, num_lines or tt.num_lines
+    w, w2 = tt.num_windows, num_windows or tt.num_windows
+    k, k2 = tt.num_kernels, num_kernels or tt.num_kernels
+    widths = {
+        "pim_reads": pim_read_slots, "pim_writes": pim_write_slots,
+        "cpu_reads": cpu_read_slots, "cpu_writes": cpu_write_slots,
+    }
+    for label, cur, tgt in (("num_lines", n, n2), ("num_windows", w, w2),
+                            ("num_kernels", k, k2)):
+        if tgt < cur:
+            raise ValueError(f"cannot shrink {label}: {cur} -> {tgt}")
+
+    fields = {f.name: getattr(tt, f.name) for f in dataclasses.fields(tt)}
+    fields.update(num_lines=n2, num_windows=w2, num_kernels=k2)
+
+    if n2 > n:
+        extra_ids = jnp.arange(n, n2, dtype=jnp.uint32)
+        fields["line_pos"] = jnp.concatenate(
+            [tt.line_pos, hash_positions(tt.spec, extra_ids).astype(jnp.int32)])
+        fields["line_reg"] = jnp.arange(n2, dtype=jnp.int32) % CPUWS_REGS
+
+    valid_of = {"pim_reads": "pim_r_valid", "pim_writes": "pim_w_valid",
+                "cpu_reads": "cpu_r_valid", "cpu_writes": "cpu_w_valid"}
+    for key, width in widths.items():
+        ids = fields[key]
+        a, a2 = ids.shape[1], width or ids.shape[1]
+        if a2 < a:
+            raise ValueError(f"cannot shrink {key} slots: {a} -> {a2}")
+        pad = ((0, w2 - w), (0, a2 - a))
+        fields[key] = jnp.pad(ids, pad, constant_values=-1)
+        fields[valid_of[key]] = jnp.pad(fields[valid_of[key]], pad)
+
+    fields["kernel_id"] = jnp.pad(tt.kernel_id, (0, w2 - w))
+    fields["kernel_start"] = jnp.pad(tt.kernel_start, (0, w2 - w))
+    fields["kernel_end"] = jnp.pad(tt.kernel_end, (0, w2 - w))
+    # Zero-padding the packed words IS packing the zero-padded boolean rows:
+    # the original last word's pad bits are already zero (the invariant).
+    fields["pre_writes"] = jnp.pad(tt.pre_writes, ((0, k2 - k), (0, n2 - n)))
+    fields["pre_writes_words"] = jnp.pad(
+        tt.pre_writes_words,
+        ((0, k2 - k), (0, packed_words(n2) - packed_words(n))))
+    for key in ("pim_instr", "cpu_instr", "cpu_priv",
+                "pim_uniq_r", "pim_uniq_w", "pim_uniq"):
+        fields[key] = jnp.pad(fields[key], (0, w2 - w))
+    fields["window_valid"] = jnp.pad(tt.window_valid, (0, w2 - w))
+    return TraceTensors(**fields)
+
+
+def bucket_shapes(
+    tts: list[TraceTensors],
+) -> list[tuple[list[int], dict[str, int]]]:
+    """Bucket membership and padded target shapes for a fleet — the
+    grouping policy behind :func:`bucket_traces`, without materializing any
+    padded trace (cheap: used by ``engine.batch_plan`` summaries).
+
+    The bucket key is ``(bucket_bound(num_lines), spec)`` — pow2-ish line
+    rounding so near-miss geometries share one compiled scan; windows,
+    kernels and access-slot widths go to the per-bucket maxima.  Returns
+    ``(original_indices, pad_trace_kwargs)`` per bucket.  Deterministic for
+    a fixed workload list: buckets appear in first-occurrence order and
+    members keep input order, so repeated calls (and repeated runs) produce
+    identical bucket shapes and compile keys.
+    """
+    groups: dict[tuple, list[int]] = {}
+    for i, t in enumerate(tts):
+        groups.setdefault((bucket_bound(t.num_lines), t.spec), []).append(i)
+    out = []
+    for (bound, _spec), idx in groups.items():
+        member = [tts[i] for i in idx]
+        out.append((idx, dict(
+            num_lines=bound,
+            num_windows=max(t.num_windows for t in member),
+            num_kernels=max(t.num_kernels for t in member),
+            pim_read_slots=max(t.pim_reads.shape[1] for t in member),
+            pim_write_slots=max(t.pim_writes.shape[1] for t in member),
+            cpu_read_slots=max(t.cpu_reads.shape[1] for t in member),
+            cpu_write_slots=max(t.cpu_writes.shape[1] for t in member),
+        )))
+    return out
+
+
+def bucket_traces(
+    tts: list[TraceTensors],
+) -> list[tuple[list[int], list[TraceTensors]]]:
+    """Group prepared traces into geometry buckets (:func:`bucket_shapes`)
+    and pad every member to its bucket's shape.  Returns
+    ``(original_indices, padded_traces)`` per bucket."""
+    return [(idx, [pad_trace(tts[i], **shape) for i in idx])
+            for idx, shape in bucket_shapes(tts)]

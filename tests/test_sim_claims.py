@@ -9,20 +9,27 @@ import pytest
 
 from repro.core.coherence import LazyPIMConfig, simulate_lazypim
 from repro.sim.costmodel import HWParams
-from repro.sim.engine import run_all, summarize
+from repro.sim.engine import run_all, run_batch, summarize
 from repro.sim.prep import prepare
 from repro.sim.trace import all_workloads, make_trace
 
 HW = HWParams()
 
 
-@pytest.fixture(scope="module")
-def matrix():
-    rows = {}
-    for app, g in all_workloads():
-        tt = prepare(make_trace(app, g, threads=16))
-        rows[tt.name] = summarize(run_all(tt, HW), HW)
-    return rows
+@pytest.fixture(scope="module", params=["sequential", "batch"])
+def matrix(request):
+    """The paper's 12-workload matrix through BOTH engines: the sequential
+    per-workload path and the geometry-bucketed batch path.  Every claims
+    band below runs against each, so both engines stay inside the paper's
+    tolerance bands from now on (they are bit-exact by
+    ``test_batch_engine``, so a divergence here means the harness itself
+    regressed)."""
+    tts = [prepare(make_trace(app, g, threads=16)) for app, g in all_workloads()]
+    if request.param == "batch":
+        results = run_batch(tts, HW)
+    else:
+        results = [run_all(tt, HW) for tt in tts]
+    return {tt.name: summarize(r, HW) for tt, r in zip(tts, results)}
 
 
 def _mean(rows, mech, key):

@@ -26,8 +26,22 @@ except ImportError:
     from _fallback_hypothesis import given, settings, st
 
 from repro.sim import prep as P
+from repro.sim.costmodel import HWParams
 from repro.sim.prep import prepare
 from repro.sim.trace import MAX_SIG_ADDRS, make_trace
+
+HW_PROPS = HWParams()
+
+# Module-level jitted scans for the padding-invariant property: fresh
+# per-example jits would recompile on every hypothesis draw.
+import jax  # noqa: E402
+
+from repro.core.coherence import LazyPIMConfig, _lazypim_acc  # noqa: E402
+from repro.core.mechanisms import ACC_FNS  # noqa: E402
+
+_JIT_CG = jax.jit(ACC_FNS["cg"])
+_JIT_LAZYPIM = jax.jit(_lazypim_acc)
+_LAZY_CFG = LazyPIMConfig()
 
 # One representative per family: seed graph, seed HTAP, frontier (both
 # apps), streaming-ingest, multi-tenant.
@@ -130,6 +144,97 @@ def test_prepare_round_trip(case, seed):
     np.testing.assert_array_equal(np.asarray(tt.pim_uniq_w), P._uniq_count_loop(pw))
     np.testing.assert_array_equal(np.asarray(tt.pim_uniq),
                                   P._uniq_union_count_loop(pr, pw))
+
+
+@settings(max_examples=6, deadline=None)
+@given(case=st.integers(0, len(FAMILY_CASES) - 1),
+       seed=st.integers(0, 2 ** 16))
+def test_padding_invariants(case, seed):
+    """pad_trace invariants (the batch engine's correctness bedrock):
+
+    * padded *lines* never set a bitmap or Bloom bit — scatter/signature
+      images over the padded geometry equal the unpadded ones, and the
+      packed zero-pad invariant holds beyond the real line count;
+    * padded *windows* leave every accumulator of the window scan unchanged
+      (carry passthrough, zero contribution);
+    * padded *slots* are the −1 sentinel with a False validity mask.
+    """
+    import jax.numpy as jnp
+
+    tr = _small_trace(case, seed, 16)
+    tt = prepare(tr)
+    n, w, k = tt.num_lines, tt.num_windows, tt.num_kernels
+    # Deterministic padded geometry per family-case so the scan compiles are
+    # shared across hypothesis examples.
+    pt = P.pad_trace(tt, num_lines=P.bucket_bound(n), num_windows=w + 4,
+                     num_kernels=k + 1,
+                     cpu_write_slots=tr.cpu_writes.shape[1] + 8)
+    n2 = pt.num_lines
+
+    # pad slots: sentinel + invalid
+    assert np.all(np.asarray(pt.cpu_writes)[:, tr.cpu_writes.shape[1]:] == -1)
+    assert not np.asarray(pt.cpu_w_valid)[:, tr.cpu_writes.shape[1]:].any()
+    assert not np.asarray(pt.window_valid)[w:].any()
+    assert np.asarray(pt.window_valid)[:w].all()
+
+    for widx in (0, w - 1, w):  # real windows + one padded window
+        # packed line bitmap: no bit at or beyond the real line count...
+        words = P.scatter_set(jnp.zeros((pt.num_line_words,), jnp.uint32),
+                              pt.pim_reads[widx], pt.pim_r_valid[widx], n2)
+        bits = np.asarray(P.unpack_bitmap(words, n2))
+        assert not bits[n:].any(), "padded line entered a bitmap"
+        # ...and the word-level zero-pad invariant still holds past n2
+        pad_bits = pt.num_line_words * 32 - n2
+        if pad_bits:
+            assert np.asarray(words)[-1] >> np.uint32(32 - pad_bits) == 0
+        # Bloom images over the padded trace == over the unpadded trace
+        if widx < w:
+            img_p = P.sig_bits_from_ids(pt, pt.pim_reads[widx],
+                                        pt.pim_r_valid[widx])
+            img_u = P.sig_bits_from_ids(tt, tt.pim_reads[widx],
+                                        tt.pim_r_valid[widx])
+            np.testing.assert_array_equal(np.asarray(img_p), np.asarray(img_u))
+        else:
+            assert int(P.popcount_words(words)) == 0, \
+                "a padded window contributed accesses"
+
+    # packed pre-writes keep the zero-pad invariant after padding
+    pw = np.asarray(P.unpack_bitmap(pt.pre_writes_words, n2))
+    assert not pw[:, n:].any() and not pw[k:].any()
+
+    # padded windows leave every accumulator unchanged: full window scans
+    # agree on the padded vs the original trace (two representative
+    # mechanisms: CG covers flush/blocked, LazyPIM covers everything else).
+    # neutral_trace + module-level jits share the compiles across examples.
+    ntt, npt = P.neutral_trace(tt), P.neutral_trace(pt)
+    for label, fn, args_u, args_p in (
+        ("cg", _JIT_CG, (ntt, HW_PROPS), (npt, HW_PROPS)),
+        ("lazypim", _JIT_LAZYPIM, (ntt, HW_PROPS, _LAZY_CFG),
+         (npt, HW_PROPS, _LAZY_CFG)),
+    ):
+        acc_u = {kk: float(v) for kk, v in fn(*args_u).items()}
+        acc_p = {kk: float(v) for kk, v in fn(*args_p).items()}
+        assert acc_u == acc_p, f"{label}: padded windows changed {acc_u} -> {acc_p}"
+
+
+def test_bucketing_is_deterministic():
+    """bucket_traces is a pure function of the workload list: same buckets,
+    same member order, same padded geometry on every call."""
+    tts = [prepare(_small_trace(i, seed=3, threads=16)) for i in (0, 1, 2, 0)]
+    a = P.bucket_traces(tts)
+    b = P.bucket_traces(tts)
+    assert [idx for idx, _ in a] == [idx for idx, _ in b]
+    for (_, pa), (_, pb) in zip(a, b):
+        for x, y in zip(pa, pb):
+            assert (x.num_lines, x.num_windows, x.num_kernels) == \
+                (y.num_lines, y.num_windows, y.num_kernels)
+            np.testing.assert_array_equal(np.asarray(x.pim_reads),
+                                          np.asarray(y.pim_reads))
+    # bucket bounds are pow2-ish and cover every member
+    for idx, padded in a:
+        assert padded[0].num_lines == P.bucket_bound(padded[0].num_lines)
+        for i, p in zip(idx, padded):
+            assert p.num_lines >= tts[i].num_lines
 
 
 def test_max_sig_addrs_is_enforced_at_full_scale():
