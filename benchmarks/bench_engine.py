@@ -5,8 +5,9 @@ Measurements, written to ``BENCH_engine.json`` at the repo root:
 0. **Geometry-bucketed batch engine** (``batch_engine``) — the full
    extended fig7 fleet through three engines with measured compile counts:
    the pre-batching per-workload-jit path (one compile per workload ×
-   mechanism), the sequential geometry-keyed path, and ``run_batch`` (one
-   compile per (mechanism, bucket), ≤ ``FLEET_COMPILE_BUDGET``).
+   mechanism), the sequential geometry-keyed path, and the ``Study``
+   planner (one compile per (mechanism, bucket), ≤
+   ``FLEET_COMPILE_BUDGET``, cross-checked against ``Study.plan()``).
 
 1. **Per-mechanism steady state** — windows/sec of every mechanism's window
    scan on the packed uint32-word path (``repro.core.mechanisms`` /
@@ -19,10 +20,9 @@ Measurements, written to ``BENCH_engine.json`` at the repo root:
    and compiles (key ``fig7_end_to_end_extended``; PR 2's
    ``fig7_end_to_end`` was the 12-workload paper set).
 3. **Single-compile sweep** — a ``SWEEP_POINTS``-point off-chip-bandwidth
-   sweep through ``repro.sim.engine.run_sweep`` with the XLA compile count
-   *measured* (jit cache size per mechanism) against the seed-style
-   alternative: HWParams as a ``static_argnums`` jit argument, which
-   recompiles every point.
+   hw-grid ``Study`` with the XLA compile count *measured* (jit cache size
+   per mechanism) against the seed-style alternative: HWParams as a
+   ``static_argnums`` jit argument, which recompiles every point.
 4. **Trace-synthesis throughput** — the jit-compiled on-device generators
    (``repro.sim.synth``) vs the sequential numpy reference
    (``repro.sim._traceref``), per workload family, compile excluded, plus
@@ -44,17 +44,13 @@ from repro.core.mechanisms import ACC_FNS
 from repro.sim import _traceref, engine, synth
 from repro.sim.costmodel import HWParams
 from repro.sim.engine import (
-    batch_plan,
     run_all,
-    run_batch,
-    run_sweep,
     sequential_cache_sizes,
-    stack_hw,
-    stack_traces,
     summarize,
     sweep_cache_sizes,
 )
-from repro.sim.prep import prepare
+from repro.sim.prep import bucket_bound, pad_trace, prepare
+from repro.sim.study import Study, grid, workload
 from repro.sim.trace import all_workloads, build_plan, make_trace
 
 from benchmarks.check_budget import FLEET_COMPILE_BUDGET  # single source
@@ -143,13 +139,18 @@ def bench_fig7_wall(hw: HWParams) -> dict:
 
 def bench_sweep(hw: HWParams, cfg: LazyPIMConfig) -> dict:
     bws = [16.0 * (i + 1) for i in range(SWEEP_POINTS)]
-    tt = prepare(make_trace("pagerank", "arxiv", threads=16))
-    stt = stack_traces([tt] * SWEEP_POINTS)
-    shw = stack_hw([HWParams(offchip_bw_gbs=b) for b in bws])
-
+    study = Study(workloads=[workload("pagerank", "arxiv")],
+                  hw=grid(offchip_bw_gbs=bws), lazy=cfg)
+    # Materialize trace prep outside the timed region.  The static-argnums
+    # comparison below runs on the SAME padded bucket geometry the planner
+    # dispatches (pagerank-arxiv padded to its pow4 bound), so the walls
+    # compare one compile vs four compiles of one identical scan — not
+    # padded-vs-unpadded shapes.
+    tt = study.traces()[0]
+    ptt = pad_trace(tt, num_lines=bucket_bound(tt.num_lines))
     before = engine.sweep_cache_sizes()
     t0 = time.perf_counter()
-    run_sweep(stt, shw, lazy_cfg=cfg)
+    study.run()
     sweep_wall = time.perf_counter() - t0
     after = engine.sweep_cache_sizes()
     sweep_compiles = {m: after[m] - before[m] for m in after}
@@ -174,7 +175,7 @@ def bench_sweep(hw: HWParams, cfg: LazyPIMConfig) -> dict:
     for b in bws:
         hw_b = HWParams(offchip_bw_gbs=b)
         for m, fn in static_fns.items():
-            args = (tt, hw_b, cfg) if m == "lazypim" else (tt, hw_b)
+            args = (ptt, hw_b, cfg) if m == "lazypim" else (ptt, hw_b)
             jax.block_until_ready(fn(*args))
     static_wall = time.perf_counter() - t0
 
@@ -199,8 +200,9 @@ def bench_batch_engine(hw: HWParams, cfg: LazyPIMConfig) -> dict:
       named traces — what the committed 162 s fig7 wall was made of);
     * ``sequential`` — post-PR ``run_all``: ``neutral_trace`` keys the jit
       cache on geometry, one compile per (mechanism, geometry);
-    * ``batched`` — ``run_batch``: one compile per (mechanism, bucket),
-      whole fleet vmapped over the stacked workload axis.
+    * ``batched`` — the ``Study`` planner: one compile per (mechanism,
+      bucket), whole fleet vmapped over the stacked workload axis, with
+      ``Study.plan()``'s prediction recorded next to the measurement.
 
     Runs FIRST in the bench (cold jit caches) so the compile counts are the
     fleet's, not leftovers from other sections.  End-to-end walls add the
@@ -231,10 +233,12 @@ def bench_batch_engine(hw: HWParams, cfg: LazyPIMConfig) -> dict:
     seq_after = sequential_cache_sizes()
     seq_compiles = sum(seq_after[m] - seq_before[m] for m in seq_after)
 
-    # --- batched run_batch (bucket-keyed compiles) ------------------------
+    # --- batched Study planner (bucket-keyed compiles) --------------------
+    study = Study(workloads=tts, hw=hw, lazy=cfg)
+    plan = study.plan()
     bat_before = sweep_cache_sizes()
     t0 = time.perf_counter()
-    run_batch(tts, hw, lazy_cfg=cfg)
+    study.run()
     bat_s = time.perf_counter() - t0
     bat_after = sweep_cache_sizes()
     bat_per_mech = {m: bat_after[m] - bat_before[m] for m in bat_after}
@@ -244,7 +248,10 @@ def bench_batch_engine(hw: HWParams, cfg: LazyPIMConfig) -> dict:
         "workloads": len(pairs),
         "mechanisms": 6,
         "trace_gen_prepare_s": prep_s,
-        "buckets": batch_plan(tts),
+        "buckets": [dict(b) for b in plan.buckets],
+        "plan_compiles_per_mechanism": plan.compiles_per_mechanism,
+        "plan_total_compiles": plan.total_compiles,
+        "plan_matches_measured": bat_per_mech == plan.compiles_per_mechanism,
         "per_workload_jit": {"sim_wall_s": per_workload_s,
                              "end_to_end_s": prep_s + per_workload_s,
                              "measured_compiles": per_workload_compiles},

@@ -12,39 +12,33 @@ Paper targets (16 threads, §1/§7, Figs. 2/7/9/11/12):
   conflict rates: Components-Enron partial 23.2% (full: 47.1% ideal/67.8% real)
                   HTAP-128      partial  9.0% (full: 21.3% ideal/37.8% real)
 
+The whole matrix is one ``Study`` over the paper fleet (the planner's
+bucketed fast path); the Fig. 12 conflict ablation reuses the fig12
+studies (one per static ``partial_commits`` setting).
+
 Usage: PYTHONPATH=src python -m benchmarks.calibrate
 """
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from repro.core.coherence import LazyPIMConfig, simulate_lazypim
-from repro.sim.costmodel import HWParams
-from repro.sim.engine import run_all, summarize
-from repro.sim.prep import prepare
-from repro.sim.trace import all_workloads, make_trace
+from benchmarks.fig12_partial_commits import run as _fig12_run
+from repro.api import HWParams, Study, all_workloads
 
 MECHS = ("cpu", "fg", "cg", "nc", "lazypim", "ideal")
 
 
 def run_matrix(threads: int = 16, hw: HWParams | None = None, verbose: bool = True):
-    hw = hw or HWParams()
-    rows = {}
-    for app, g in all_workloads():
-        t0 = time.time()
-        tt = prepare(make_trace(app, g, threads=threads))
-        res = run_all(tt, hw)
-        rows[tt.name] = summarize(res, hw)
-        if verbose:
-            d = rows[tt.name]
+    rs = Study(workloads=all_workloads(), hw=hw, threads=threads).run()
+    rows = {p.workload: s for p, s in zip(rs.points, rs.normalized())}
+    if verbose:
+        for name, d in rows.items():
             line = " ".join(
                 f"{m}:{d[m]['speedup']:.2f}/{d[m]['traffic']:.2f}/{d[m]['energy']:.2f}"
                 for m in ("fg", "cg", "nc", "lazypim", "ideal"))
-            print(f"{tt.name:22s} {line}  confl={d['lazypim']['conflict_rate']:.2f}"
-                  f"/{d['lazypim']['conflict_rate_exact']:.2f} ({time.time()-t0:.0f}s)")
+            print(f"{name:22s} {line}  confl={d['lazypim']['conflict_rate']:.2f}"
+                  f"/{d['lazypim']['conflict_rate_exact']:.2f}")
     return rows
 
 
@@ -59,21 +53,9 @@ def aggregate(rows):
     return agg
 
 
-def conflict_study(hw: HWParams | None = None, threads: int = 16):
+def conflict_study(threads: int = 16):
     """Fig. 12 reproduction: full vs partial commit conflict rates."""
-    hw = hw or HWParams()
-    out = {}
-    for app, g in (("components", "enron"), ("htap128", None)):
-        tt = prepare(make_trace(app, g, threads=threads))
-        partial = simulate_lazypim(tt, hw, LazyPIMConfig(partial_commits=True))
-        full = simulate_lazypim(tt, hw, LazyPIMConfig(partial_commits=False))
-        out[tt.name] = dict(
-            partial_real=partial.conflict_rate,
-            partial_ideal=partial.conflict_rate_exact,
-            full_real=full.conflict_rate,
-            full_ideal=full.conflict_rate_exact,
-        )
-    return out
+    return _fig12_run(threads)
 
 
 TARGETS = dict(
@@ -84,8 +66,7 @@ TARGETS = dict(
 
 
 def main():
-    hw = HWParams()
-    rows = run_matrix(hw=hw)
+    rows = run_matrix()
     agg = aggregate(rows)
     print("\n=== Aggregates (mean over 12 workloads, normalized to CPU-only) ===")
     print(f"{'mech':8s} {'speedup':>8s} {'target':>7s} {'traffic':>8s} {'target':>7s} {'energy':>8s} {'target':>7s}")
@@ -112,7 +93,7 @@ def main():
     print(f"LazyPIM energy gap to Ideal: {lz['energy']/ideal['energy']-1:+.1%} (paper 4.4%)")
 
     print("\n=== Fig.12 conflict rates ===")
-    cs = conflict_study(hw)
+    cs = conflict_study()
     for k, v in cs.items():
         print(f"{k}: partial {v['partial_real']:.1%} real / {v['partial_ideal']:.1%} ideal "
               f"| full {v['full_real']:.1%} real / {v['full_ideal']:.1%} ideal")

@@ -1,16 +1,27 @@
-"""CI gate: the committed ``BENCH_engine.json`` must carry a
-``batch_engine`` section whose *measured* fleet compile count is within the
-batch engine's budget (one compile per (mechanism, geometry bucket) — see
-``benchmarks.bench_engine.FLEET_COMPILE_BUDGET``).
+"""CI gate for the fleet compile budget, in two tiers.
 
-Exits non-zero if the section is missing or over budget, so a regression
-that silently multiplies compiles (a new static jit key, a bucketing
-change that splinters the fleet) fails the pipeline even though the
-benchmark itself runs on the reference container, not in CI.  The live
-counterpart — asserted on every tier-1 run — is
-``tests/test_batch_engine.py::test_fleet_buckets_and_compile_budget``.
+**Committed-record gate** (default): the committed ``BENCH_engine.json``
+must carry a ``batch_engine`` section whose *measured* fleet compile count
+is within the batch engine's budget (one compile per (mechanism, geometry
+bucket)).  Exits non-zero if the section is missing or over budget, so a
+regression that silently multiplies compiles (a new static jit key, a
+bucketing change that splinters the fleet) fails the pipeline even though
+the benchmark itself runs on the reference container, not in CI.
 
-Usage: python -m benchmarks.check_budget [path-to-BENCH_engine.json]
+**Live planner cross-check** (``--live``): build THE fig7 study
+(``benchmarks.fig7_speedup.study()``), take ``Study.plan()``'s predicted
+per-mechanism compile counts, run the study, and assert the measured
+``repro.sim.engine.sweep_cache_sizes`` deltas equal the prediction exactly
+(the process starts with cold jit caches) and stay within
+``FLEET_COMPILE_BUDGET``.  This is the end-to-end guarantee that the
+planner's budget arithmetic matches what XLA actually compiles.
+
+The always-on counterpart inside tier-1 is
+``tests/test_batch_engine.py::test_fleet_buckets_and_compile_budget``
+(structural form) plus ``tests/test_study.py`` (plan-vs-measured on a
+small study).
+
+Usage: python -m benchmarks.check_budget [--live] [path-to-BENCH_engine.json]
 """
 
 from __future__ import annotations
@@ -21,15 +32,11 @@ import sys
 
 # THE fleet compile budget: 6 mechanisms × ≤3 geometry buckets for the full
 # extended fig7 suite.  Single source of truth — bench_engine embeds it in
-# the JSON record and the gate below enforces it against the measurement;
-# tests/test_batch_engine.py asserts the structural form (≤ 1 compile per
-# (mechanism, bucket)) live on every tier-1 run.
+# the JSON record and the gates below enforce it against the measurement.
 FLEET_COMPILE_BUDGET = 18
 
 
-def main(argv: list[str]) -> int:
-    path = pathlib.Path(argv[1]) if len(argv) > 1 else \
-        pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
+def check_committed(path: pathlib.Path) -> int:
     try:
         record = json.loads(path.read_text())
     except FileNotFoundError:
@@ -56,6 +63,50 @@ def main(argv: list[str]) -> int:
               f"{FLEET_COMPILE_BUDGET})", file=sys.stderr)
         return 1
     return 0
+
+
+def check_live() -> int:
+    """Predicted-vs-measured compile budget for the fig7 study, end to end.
+    Must run in a fresh process (cold jit caches): the prediction is the
+    cold-cache compile count."""
+    from benchmarks.fig7_speedup import study as fig7_study
+    from repro.sim.engine import sweep_cache_sizes
+
+    study = fig7_study()
+    plan = study.plan()
+    predicted = plan.compiles_per_mechanism
+    print(f"check_budget --live: fig7 plan:\n{plan.describe()}")
+    before = sweep_cache_sizes(study.mechanisms)
+    study.run()
+    after = sweep_cache_sizes(study.mechanisms)
+    measured = {m: after[m] - before[m] for m in study.mechanisms}
+    print(f"check_budget --live: predicted {predicted}")
+    print(f"check_budget --live: measured  {measured}")
+    if measured != predicted:
+        print("check_budget --live: MISMATCH — Study.plan() no longer "
+              "predicts the measured XLA compile count", file=sys.stderr)
+        return 1
+    total = sum(measured.values())
+    if total > FLEET_COMPILE_BUDGET:
+        print(f"check_budget --live: OVER BUDGET ({total} > "
+              f"{FLEET_COMPILE_BUDGET})", file=sys.stderr)
+        return 1
+    print(f"check_budget --live: {total} compiles within budget "
+          f"{FLEET_COMPILE_BUDGET}, plan exact")
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    args = list(argv[1:])
+    live = "--live" in args
+    if live:
+        args.remove("--live")
+    path = pathlib.Path(args[0]) if args else \
+        pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
+    rc = check_committed(path)
+    if rc == 0 and live:
+        rc = check_live()
+    return rc
 
 
 if __name__ == "__main__":

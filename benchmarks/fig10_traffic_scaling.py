@@ -6,23 +6,20 @@ printed for reference; synthesized traces keep per-window access patterns
 thread-invariant (threads scale instruction counts), so the paper's
 superlinear flush growth is out of this harness's scope.
 
-Shares fig8's batched sweep: one compiled, vmapped execution over the
-stacked thread-count axis per (mechanism, bucket)
-(``repro.sim.engine.run_batch`` with a per-point hw list)."""
+Shares fig8's zipped-hw ``Study``: the planner folds the thread-count axis
+onto one compiled, vmapped execution per (mechanism, bucket)."""
 
 from benchmarks.fig8_scaling import THREADS, WORKLOADS, sweep_points
-from repro.sim.engine import summarize
 
 
 def run():
     out, cg_flush = {}, {}
     for app, graph in WORKLOADS:
-        points, hws = sweep_points(app, graph)
+        rs = sweep_points(app, graph)
         name = f"{app}-{graph}"
-        out[name] = {t: summarize(points[i], hws[i])
-                     for i, t in enumerate(THREADS)}
-        cg_flush[name] = {t: points[i]["cg"].flush_lines
-                          for i, t in enumerate(THREADS)}
+        out[name] = dict(zip(THREADS, rs.normalized()))
+        cg_flush[name] = {t: p.results["cg"].flush_lines
+                          for t, p in zip(THREADS, rs.points)}
     return out, cg_flush
 
 

@@ -1,19 +1,14 @@
 """Fig. 11: normalized energy, 16 threads.  Validates: LazyPIM -18.0% vs
-CG, -35.5% vs FG, -62.2% vs NC, -43.7% vs CPU-only, within ~4.4% of Ideal."""
+CG, -35.5% vs FG, -62.2% vs NC, -43.7% vs CPU-only, within ~4.4% of Ideal.
 
-from repro.sim.costmodel import HWParams
-from repro.sim.engine import run_all, summarize
-from repro.sim.prep import prepare
-from repro.sim.trace import all_workloads, make_trace
+One ``Study`` over the paper's 12 workloads — bucketed fast path."""
+
+from repro.api import Study, all_workloads
 
 
 def run(threads: int = 16):
-    hw = HWParams()
-    rows = {}
-    for app, g in all_workloads():
-        tt = prepare(make_trace(app, g, threads=threads))
-        rows[tt.name] = summarize(run_all(tt, hw), hw)
-    return rows
+    rs = Study(workloads=all_workloads(), threads=threads).run()
+    return {p.workload: s for p, s in zip(rs.points, rs.normalized())}
 
 
 def main():

@@ -1,25 +1,40 @@
 """Fig. 12: full- vs partial-kernel commit conflict rates (idealized
 no-false-positive vs realistic signatures).  Paper: Components-Enron
-47.1%/67.8% full -> 23.2% partial; HTAP-128 21.3%/37.8% -> 9.0%."""
+47.1%/67.8% full -> 23.2% partial; HTAP-128 21.3%/37.8% -> 9.0%.
 
-from repro.core.coherence import LazyPIMConfig, simulate_lazypim
-from repro.sim.costmodel import HWParams
-from repro.sim.prep import prepare
-from repro.sim.trace import make_trace
+Two ``Study`` runs (``partial_commits`` is a static flag: each combo is its
+own compiled dataflow, so the ablation is one study per setting,
+concatenated) — both ride the planner's bucketed fast path.  The combined
+``ResultSet`` is pinned by ``tests/golden/fig12_golden.json``
+(``tests/test_fig12_golden.py``)."""
+
+from repro.api import LazyPIMConfig, ResultSet, Study
+
+WORKLOADS = (("components", "enron"), ("htap128", None))
+
+
+def study(partial: bool, threads: int = 16) -> Study:
+    return Study(workloads=WORKLOADS, mechanisms=("lazypim",),
+                 lazy=LazyPIMConfig(partial_commits=partial), threads=threads)
+
+
+def result_set(threads: int = 16) -> ResultSet:
+    """Partial- then full-commit points, concatenated (the golden artifact)."""
+    return ResultSet.concat([study(True, threads).run(),
+                             study(False, threads).run()])
 
 
 def run(threads: int = 16):
-    hw = HWParams()
+    rs = result_set(threads)
+    part, full = rs.points[:len(WORKLOADS)], rs.points[len(WORKLOADS):]
     out = {}
-    for app, g in (("components", "enron"), ("htap128", None)):
-        tt = prepare(make_trace(app, g, threads=threads))
-        part = simulate_lazypim(tt, hw, LazyPIMConfig(partial_commits=True))
-        full = simulate_lazypim(tt, hw, LazyPIMConfig(partial_commits=False))
-        out[tt.name] = {
-            "full_ideal": full.conflict_rate_exact,
-            "full_real": full.conflict_rate,
-            "partial_ideal": part.conflict_rate_exact,
-            "partial_real": part.conflict_rate,
+    for pp, fp in zip(part, full):
+        lz_p, lz_f = pp.results["lazypim"], fp.results["lazypim"]
+        out[pp.workload] = {
+            "full_ideal": lz_f.conflict_rate_exact,
+            "full_real": lz_f.conflict_rate,
+            "partial_ideal": lz_p.conflict_rate_exact,
+            "partial_real": lz_p.conflict_rate,
         }
     return out
 

@@ -1,30 +1,29 @@
 """Fig. 13: signature-size sweep (2/4/8 Kbit).  Paper: 2K->8K cuts the
-conflict rate ~30% and execution time ~10% but costs ~32% more traffic."""
+conflict rate ~30% and execution time ~10% but costs ~32% more traffic.
 
-from repro.core.coherence import LazyPIMConfig, simulate_lazypim
-from repro.core.mechanisms import simulate_cpu_only
-from repro.core.signatures import SignatureSpec
-from repro.sim.costmodel import HWParams
-from repro.sim.prep import prepare
-from repro.sim.trace import make_trace
+One ``Study`` whose workload axis carries a per-entry ``SignatureSpec``
+(each signature size is its own geometry bucket — the spec keys the bucket
+— so the whole sweep is still one compile per (mechanism, spec))."""
+
+from repro.api import SignatureSpec, Study, workload
+
+WORKLOADS = (("components", "enron"), ("htap128", None))
+SIG_BITS = (2048, 4096, 8192)
 
 
 def run(threads: int = 16):
-    hw = HWParams()
+    wls = [workload(app, g, spec=SignatureSpec(sig_bits=b))
+           for app, g in WORKLOADS for b in SIG_BITS]
+    rs = Study(workloads=wls, mechanisms=("cpu", "lazypim"),
+               threads=threads).run()
     out = {}
-    for app, g in (("components", "enron"), ("htap128", None)):
-        name = None
-        for bits in (2048, 4096, 8192):
-            trace = make_trace(app, g, threads=threads)
-            tt = prepare(trace, SignatureSpec(sig_bits=bits))
-            name = tt.name
-            base = simulate_cpu_only(tt, hw)
-            lz = simulate_lazypim(tt, hw, LazyPIMConfig())
-            out[(name, bits)] = {
-                "conflict": lz.conflict_rate,
-                "time_norm": lz.time_ns / base.time_ns,
-                "traffic_norm": lz.offchip_bytes / base.offchip_bytes,
-            }
+    for wl, p in zip(wls, rs.points):
+        base, lz = p.results["cpu"], p.results["lazypim"]
+        out[(p.workload, wl.spec.sig_bits)] = {
+            "conflict": lz.conflict_rate,
+            "time_norm": lz.time_ns / base.time_ns,
+            "traffic_norm": lz.offchip_bytes / base.offchip_bytes,
+        }
     return out
 
 

@@ -5,28 +5,24 @@ extended set adds the new families (BFS/SSSP frontier kernels,
 streaming-ingest HTAP, multi-tenant mixes); paper-validation means are
 computed over the paper set only.
 
-Runs on the geometry-bucketed batch engine by default: the whole fleet is
-one compiled, vmapped window scan per (mechanism, bucket) —
-``engine="sequential"`` keeps the per-workload ``run_all`` path (bit-exact
-with the batch path; ``tests/test_batch_engine.py``)."""
+One declarative ``Study`` over the whole fleet: the planner buckets the
+geometries and runs one compiled, vmapped window scan per (mechanism,
+bucket) — ``engine="sequential"`` keeps the per-workload reference path
+(bit-exact with the planner; ``tests/test_batch_engine.py``).  This study
+is also the live compile-budget fixture of ``benchmarks/check_budget.py``.
+"""
 
-from repro.sim.costmodel import HWParams
-from repro.sim.engine import run_all, run_batch, summarize
-from repro.sim.prep import prepare
-from repro.sim.trace import all_workloads, make_trace
+from repro.api import Study, all_workloads
+
+
+def study(threads: int = 16, extended: bool = True) -> Study:
+    """THE fig7 study: every fleet workload × every mechanism."""
+    return Study(workloads=all_workloads(extended=extended), threads=threads)
 
 
 def run(threads: int = 16, extended: bool = True, engine: str = "batch"):
-    hw = HWParams()
-    tts = [prepare(make_trace(app, g, threads=threads))
-           for app, g in all_workloads(extended=extended)]
-    if engine == "batch":
-        results = run_batch(tts, hw)
-    elif engine == "sequential":
-        results = [run_all(tt, hw) for tt in tts]
-    else:
-        raise ValueError(f"unknown engine {engine!r}")
-    return {tt.name: summarize(r, hw) for tt, r in zip(tts, results)}
+    rs = study(threads, extended).run(engine=engine)
+    return {p.workload: s for p, s in zip(rs.points, rs.normalized())}
 
 
 def main():

@@ -3,37 +3,31 @@ each count.  Validates the scaling ORDER: Ideal > LazyPIM > FG > {CG, NC},
 with FG scaling better than CG/NC — on the paper's PageRank-arXiv and on
 the new bursty-frontier family (BFS-arXiv).
 
-Runs on the fleet batch engine with a per-point hardware axis
-(``repro.sim.engine.run_batch`` with an hw list): the hw × trace
-cross-product — every (workload, thread-count) pair with its matching
-core counts — is one compiled, vmapped window scan per (mechanism,
-geometry bucket), composing the PR-2 hw-axis sweep with the workload
-axis."""
+One ``Study`` per workload with a zipped hardware axis: each thread count
+pairs its trace with matching core counts (an explicit ``hw=`` list is
+zipped per-workload), and the planner folds the whole sweep onto one
+compiled, vmapped window scan per (mechanism, geometry bucket)."""
 
-from repro.sim.costmodel import HWParams
-from repro.sim.engine import run_batch, summarize
-from repro.sim.prep import prepare
-from repro.sim.trace import make_trace
+from repro.api import HWParams, ResultSet, Study, workload
 
 THREADS = (4, 8, 16)
 WORKLOADS = (("pagerank", "arxiv"), ("bfs", "arxiv"))
 
 
-def sweep_points(app: str = "pagerank", graph: str = "arxiv"):
-    """(points, hws) for one workload swept over THREADS — the thread axis
-    rides the batch engine's stacked workload axis with one HWParams per
-    point (same bit-exact results as the PR-2 ``run_sweep`` path)."""
-    hws = [HWParams(cpu_cores=t, pim_cores=t) for t in THREADS]
-    tts = [prepare(make_trace(app, graph, threads=t)) for t in THREADS]
-    return run_batch(tts, hws), hws
+def sweep_points(app: str = "pagerank", graph: str = "arxiv") -> ResultSet:
+    """One workload swept over THREADS — the thread axis rides the
+    planner's stacked lane axis with one HWParams per point."""
+    return Study(
+        workloads=[workload(app, graph, threads=t) for t in THREADS],
+        hw=[HWParams(cpu_cores=t, pim_cores=t) for t in THREADS],
+    ).run()
 
 
 def run():
     out = {}
     for app, graph in WORKLOADS:
-        points, hws = sweep_points(app, graph)
-        out[f"{app}-{graph}"] = {
-            t: summarize(points[i], hws[i]) for i, t in enumerate(THREADS)}
+        rs = sweep_points(app, graph)
+        out[f"{app}-{graph}"] = dict(zip(THREADS, rs.normalized()))
     return out
 
 

@@ -1,21 +1,19 @@
 """Fig. 9: normalized off-chip traffic (lower is better), 16 threads.
 Validates: LazyPIM -30.9% vs CG (best prior) and -86% vs CPU-only; NC
-highest; the Radii-arXiv flush-count reduction (-92.2% vs CG)."""
+highest; the Radii-arXiv flush-count reduction (-92.2% vs CG).
 
-from repro.sim.costmodel import HWParams
-from repro.sim.engine import run_all, summarize
-from repro.sim.prep import prepare
-from repro.sim.trace import all_workloads, make_trace
+One ``Study`` over the paper's 12 workloads — this figure rides the
+planner's bucketed fast path (one compile per (mechanism, bucket)) instead
+of the old per-workload sequential loop."""
+
+from repro.api import Study, all_workloads
 
 
 def run(threads: int = 16):
-    hw = HWParams()
-    rows, flush = {}, {}
-    for app, g in all_workloads():
-        tt = prepare(make_trace(app, g, threads=threads))
-        res = run_all(tt, hw)
-        rows[tt.name] = summarize(res, hw)
-        flush[tt.name] = {m: res[m].flush_lines for m in ("cg", "lazypim")}
+    rs = Study(workloads=all_workloads(), threads=threads).run()
+    rows = {p.workload: s for p, s in zip(rs.points, rs.normalized())}
+    flush = {p.workload: {m: p.results[m].flush_lines
+                          for m in ("cg", "lazypim")} for p in rs.points}
     return rows, flush
 
 

@@ -1,32 +1,29 @@
 """Quickstart: the paper in 60 seconds.
 
-Runs the LazyPIM coherence simulator on one graph workload + one HTAP
-workload and prints the speedup/traffic/energy of every mechanism, then
-exercises the Bloom-signature kernel the protocol is built on.
+One declarative ``Study`` runs the LazyPIM coherence simulator on a graph
+workload + an HTAP workload (every mechanism, bucketed single-compile
+planner) and prints the speedup/traffic/energy table, then exercises the
+Bloom-signature kernel the protocol is built on.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax.numpy as jnp
 
+from repro.api import Study
 from repro.core.signatures import SignatureSpec, empty_signature
 from repro.kernels.bloom import bloom_insert, bloom_intersect
-from repro.sim.costmodel import HWParams
-from repro.sim.engine import run_workload, summarize
 
 
 def main():
-    hw = HWParams()
-    for app, g in (("pagerank", "arxiv"), ("htap128", None)):
-        res = run_workload(app, g, threads=16)
-        s = summarize(res, hw)
-        name = f"{app}-{g}" if g else app
-        print(f"\n== {name} (normalized to CPU-only) ==")
+    results = Study(workloads=["pagerank-arxiv", "htap128"]).run()
+    for point, summary in zip(results.points, results.normalized()):
+        print(f"\n== {point.workload} (normalized to CPU-only) ==")
         print(f"{'mechanism':10s} {'speedup':>8s} {'traffic':>8s} {'energy':>8s}")
         for m in ("fg", "cg", "nc", "lazypim", "ideal"):
-            d = s[m]
+            d = summary[m]
             print(f"{m:10s} {d['speedup']:8.2f} {d['traffic']:8.2f} {d['energy']:8.2f}")
-        lz = s["lazypim"]
+        lz = summary["lazypim"]
         print(f"LazyPIM conflict rate: {lz['conflict_rate']:.1%} "
               f"(exact {lz['conflict_rate_exact']:.1%})")
 

@@ -1,0 +1,37 @@
+"""Study-planner tour: a hardware grid × lazy-knob ablation in one spec.
+
+Sweeps the off-chip link bandwidth (the paper's scarce resource) against a
+PIM-DBI on/off ablation on one graph workload, printing the planner's
+predicted compile budget *before* running, then the pivoted result table.
+The whole 3x2 cross-product costs one XLA compile per (mechanism, bucket).
+
+    PYTHONPATH=src python examples/study_grid.py
+"""
+
+from repro.api import LazyPIMConfig, Study, grid
+
+
+def main():
+    study = Study(
+        workloads=["pagerank-arxiv"],
+        hw=grid(offchip_bw_gbs=[16.0, 32.0, 64.0]),
+        mechanisms=("cpu", "cg", "lazypim"),
+        lazy=[LazyPIMConfig(use_dbi=True), LazyPIMConfig(use_dbi=False)],
+    )
+    print(study.plan().describe())
+
+    results = study.run()
+    table = results.pivot(("hw_index", "lazy_index"), "mechanism", "speedup")
+    bws = [h.offchip_bw_gbs for h in study.hw_points()]
+    print(f"\n{'bw_gbs':>7s} {'dbi':>5s} {'cg':>7s} {'lazypim':>8s}")
+    for (h, li), row in sorted(table.items()):
+        dbi = study.lazy_points()[li].use_dbi
+        print(f"{bws[h]:7.0f} {str(bool(dbi)):>5s} {row['cg']:7.2f} "
+              f"{row['lazypim']:8.2f}")
+    lz = [p for p in results.points if p.hw_index == 0]
+    d_on, d_off = (p.results["lazypim"].dbi_writebacks for p in lz)
+    print(f"\nDBI writebacks at 16 GB/s: {d_on:.0f} (on) vs {d_off:.0f} (off)")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,6 @@ injected failure + restart (deliverable b).
 """
 
 import argparse
-import dataclasses
 import sys
 import tempfile
 

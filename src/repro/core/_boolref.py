@@ -28,6 +28,7 @@ from repro.core.mechanisms import (
     _cpu_dyn_count,
     _f,
     _finalize,
+    finalize_result,
     _pim_acc_count,
     _pim_compute_ns,
     _pim_dram_bytes,
@@ -453,8 +454,7 @@ def simulate_lazypim_bool(
 ) -> SimResult:
     cfg = cfg or LazyPIMConfig()
     acc = _run_lazypim_bool(tt, hw, cfg)
-    return SimResult(name=tt.name, mechanism="lazypim",
-                     **{k: float(v) for k, v in acc.items()})
+    return finalize_result(tt.name, "lazypim", acc)
 
 
 ACC_FNS_BOOL = {

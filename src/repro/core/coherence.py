@@ -59,6 +59,7 @@ import jax.numpy as jnp
 
 from repro.core.mechanisms import (
     SimResult,
+    finalize_result,
     _bw_bound_ns,
     _cpu_dyn_count,
     _cpu_compute_ns,
@@ -300,5 +301,4 @@ def simulate_lazypim(
 ) -> SimResult:
     cfg = cfg or LazyPIMConfig()
     acc = _run_lazypim(prep_neutral(tt), hw, cfg)
-    return SimResult(name=tt.name, mechanism="lazypim",
-                     **{k: float(v) for k, v in acc.items()})
+    return finalize_result(tt.name, "lazypim", acc)

@@ -46,6 +46,7 @@ from repro.sim.prep import (
 
 __all__ = [
     "SimResult",
+    "finalize_result",
     "simulate_cpu_only",
     "simulate_ideal",
     "simulate_fg",
@@ -164,12 +165,20 @@ def _bw_bound_ns(hw: HWParams, offchip_bytes):
     return offchip_bytes / hw.offchip_bw_gbs
 
 
-def _finalize(tt: TraceTensors, mech: str, acc: dict) -> SimResult:
+def finalize_result(name: str, mechanism: str, acc: dict) -> SimResult:
+    """THE accumulator→``SimResult`` constructor: every engine (sequential
+    simulators, ``run_sweep``, the batch/study planner) funnels its raw
+    accumulator dict through here, so result construction cannot drift
+    between engines (the bit-exact cross-engine tests pin it)."""
     return SimResult(
-        name=tt.name,
-        mechanism=mech,
+        name=name,
+        mechanism=mechanism,
         **{k: float(v) for k, v in acc.items()},
     )
+
+
+def _finalize(tt: TraceTensors, mech: str, acc: dict) -> SimResult:
+    return finalize_result(tt.name, mech, acc)
 
 
 # ---------------------------------------------------------------------------

@@ -3,7 +3,6 @@ implementation in repro.models.attention IS the memory-safe reference."""
 
 from __future__ import annotations
 
-import jax
 
 from repro.models.attention import mha_chunked
 

@@ -10,7 +10,6 @@ instead of G+1 separate passes for the unfused jnp version.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

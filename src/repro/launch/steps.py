@@ -7,11 +7,9 @@ logical-rule ``sharding_ctx`` for internal constraints.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import common as C

@@ -15,18 +15,15 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config, get_smoke_config
 from repro.data.pipeline import DataConfig, host_batch
 from repro.launch import steps as steps_lib
-from repro.models import common as C
 from repro.models.frontends import synth_embeddings
 from repro.models.model import Model
 from repro.optim import adamw
-from repro.runtime.fault_tolerance import (HeartbeatMonitor, RestartPolicy,
-                                           StragglerDetector)
+from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerDetector
 
 
 def build(args):

@@ -23,9 +23,30 @@ from __future__ import annotations
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 
 LINE_BYTES = 64
 CTRL_BYTES = 8  # coherence request/ack packet payload
+
+# Fields that stack as int32 in a swept HWParams axis; every other field
+# stacks as float32.  This is the single explicit dtype map behind
+# :func:`hw_leaf_dtypes` — sweeps that write ``offchip_bw_gbs=16`` and
+# ``offchip_bw_gbs=16.0`` must land in the same compiled function, so the
+# stacking dtype comes from this declaration, not from the (stringified,
+# ``from __future__ import annotations``) field annotations.
+_HW_INT_FIELDS = frozenset({
+    "cpu_cores", "pim_cores", "cpu_cache_lines", "pim_cache_lines",
+    "thread_cache_cap", "cpu_only_cache_cap", "nc_bytes",
+})
+
+
+def hw_leaf_dtypes() -> dict[str, jnp.dtype]:
+    """Declared stacking dtype of every HWParams field (int32 counts /
+    capacities, float32 everything else).  ``engine.stack_hw`` normalizes
+    each swept leaf to this dtype; ``tests/test_study.py`` asserts every
+    field round-trips through ``stack_hw`` at the declared dtype."""
+    return {f.name: jnp.int32 if f.name in _HW_INT_FIELDS else jnp.float32
+            for f in dataclasses.fields(HWParams)}
 
 @dataclasses.dataclass(frozen=True)
 class HWParams:

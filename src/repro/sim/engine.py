@@ -1,44 +1,44 @@
-"""Top-level simulation driver: run every mechanism over a workload trace.
+"""Execution engines behind the declarative ``Study`` planner.
 
-This is the gem5-replacement entry point used by the benchmarks:
+The one front door for experiments is :class:`repro.sim.study.Study`
+(re-exported as ``repro.api``): a declarative (workloads × hw × mechanisms ×
+lazy-config) spec whose ``run()`` plans execution automatically.  This
+module provides the layered engines the planner dispatches through — kept
+public because they are also the differential references that pin the
+planner bit-exact:
 
-    tt = prepare(make_trace("pagerank", "arxiv", threads=16))
-    results = run_all(tt, HWParams())           # mech -> SimResult
-    table = summarize(results, HWParams())      # normalized to CPU-only
+* **Sequential reference** — :func:`run_all` / :func:`run_mechanism` run one
+  prepared trace through each mechanism's own jitted scan
+  (``neutral_trace`` keys the jit cache on geometry, not workload name).
+  This is the readable per-point path every batched engine is tested
+  against, field-for-field.
+* **Stacked dispatch** — :func:`run_sweep` executes a *pre-stacked* sweep:
+  every tensor leaf of the trace / hardware / lazy-config pytrees carries a
+  leading point axis (:func:`stack_traces` / :func:`stack_hw` /
+  :func:`stack_lazy`), and one jitted+vmapped scan per mechanism
+  (:func:`_sweep_fn`, lru-cached — its jit cache size IS the measured
+  compile count, :func:`sweep_cache_sizes`) runs all points in one
+  execution.  ``HWParams`` leaves and ``LazyPIMConfig``'s numeric knobs are
+  traced, so any values ride one compile; only trace geometry,
+  ``SignatureSpec`` and the static lazy flags (``partial_commits``,
+  ``cpuws_regs``, ``max_rollbacks``) select a different compiled function.
+* **Bucketed fleet** — :func:`run_batch` is the planner's fleet form: a
+  mixed-geometry workload list is grouped into pow2-ish geometry buckets
+  (:func:`repro.sim.prep.bucket_traces`), padded under explicit validity
+  masks, and dispatched through the stacked engine — one XLA compile per
+  (mechanism, bucket) for any fleet size, bit-exact with sequential
+  :func:`run_all` on every ``SimResult`` field.  ``run_batch`` itself is a
+  thin wrapper over the ``Study`` planner, so the long-standing
+  differential/golden tests (``tests/test_batch_engine.py``,
+  ``tests/golden/fig7_batched_golden.json``) pin the planner's numerics.
 
-**Sweeps compile once.**  ``HWParams`` and ``LazyPIMConfig`` are traced
-pytrees (no static jit args), so a parameter sweep does not re-trigger XLA
-compilation per point; :func:`run_sweep` goes further and ``jax.vmap``s one
-compiled step function over *stacked* hardware/trace axes — a fig8/fig10
-style sweep is one compile plus one batched execution instead of N
-sequential jit misses.  Build the stacked axes with :func:`stack_hw` (any
-HWParams fields may vary) and :func:`stack_traces` (same-geometry traces,
-e.g. the same workload generated at different thread counts — any family
-from ``trace.all_workloads(extended=True)``, including the new
-frontier/streaming/multi-tenant workloads, since trace synthesis keys
-geometry on the static plan, not on seed or threads).  Every
-``HWParams`` field may vary per sweep point.  ``LazyPIMConfig`` is passed
-unbatched (one config per :func:`run_sweep` call): its numeric fields are
-traced leaves, so *calls* with different values reuse the compiled step,
-while the static flags (``partial_commits``, ``cpuws_regs``,
-``max_rollbacks``) — like ``SignatureSpec`` geometry and trace shapes —
-select a different compiled function.
-:func:`sweep_cache_sizes` exposes the per-mechanism compile counts so the
-one-compile claim is measured, not inferred
-(``benchmarks/bench_engine.py``).
-
-**Fleets compile per bucket, not per workload.**  :func:`run_batch` runs a
-mixed-geometry workload fleet (e.g. the full fig7 suite from
-``trace.all_workloads(extended=True)``) by grouping traces into pow2-ish
-geometry buckets (:func:`repro.sim.prep.bucket_traces`), padding members
-onto the bucket shape under explicit validity masks, and vmapping the same
-compiled step functions over the stacked workload axis — one XLA compile
-per (mechanism, bucket) instead of one per (mechanism, workload), bit-exact
-with sequential :func:`run_all` on every ``SimResult`` field.  All
-entry points also strip the workload ``name``/``threads`` metadata before
-jit (:func:`repro.sim.prep.neutral_trace`): both are static pytree leaves,
-so pre-batching they silently keyed the jit cache and every *workload*
-recompiled every mechanism even at identical geometry.
+The planner composes the axes by *folding them into the stacked workload
+axis*: an hw grid or lazy ablation repeats each padded trace per
+(hw-point, lazy-point) lane, so the whole cross-product still costs at most
+one compile per (mechanism, bucket, static-flag combo) —
+:meth:`repro.sim.study.Study.plan` predicts that budget before anything
+runs, and ``benchmarks/check_budget.py --live`` cross-checks the prediction
+against the measured :func:`sweep_cache_sizes` deltas.
 """
 
 from __future__ import annotations
@@ -61,16 +61,14 @@ from repro.core.mechanisms import (
     simulate_nc,
 )
 from repro.core.signatures import SignatureSpec
-from repro.sim.costmodel import HWParams
+from repro.sim.costmodel import HWParams, hw_leaf_dtypes
 from repro.sim.prep import (
     TRACE_DATA_FIELDS,
     TraceTensors,
-    bucket_shapes,
-    bucket_traces,
     neutral_trace,
     prepare,
 )
-from repro.sim.trace import WindowTrace, make_trace
+from repro.sim.trace import make_trace
 
 MECHANISMS = ("cpu", "fg", "cg", "nc", "lazypim", "ideal")
 
@@ -105,21 +103,56 @@ def run_all(
 
 
 # ---------------------------------------------------------------------------
-# Single-compile sweep engine
+# Pytree stacking: the leading point axis of the stacked dispatch engine
 # ---------------------------------------------------------------------------
 
 
 def stack_hw(hws: list[HWParams]) -> HWParams:
     """Stack a list of HWParams into one pytree with (S,)-shaped leaves.
 
-    Leaf dtypes follow the field annotations (float32 / int32), so sweeps
-    that write ``offchip_bw_gbs=16`` and ``offchip_bw_gbs=16.0`` hit the
-    same compiled function."""
+    Leaf dtypes come from the explicit declaration
+    :func:`repro.sim.costmodel.hw_leaf_dtypes` (int32 counts/capacities,
+    float32 everything else), so sweeps that write ``offchip_bw_gbs=16``
+    and ``offchip_bw_gbs=16.0`` hit the same compiled function.  Every
+    field round-trips at its declared dtype (``tests/test_study.py``)."""
+    dtypes = hw_leaf_dtypes()
     kw = {}
     for f in dataclasses.fields(HWParams):
-        dt = jnp.float32 if "float" in str(f.type) else jnp.int32
-        kw[f.name] = jnp.asarray([getattr(h, f.name) for h in hws], dtype=dt)
+        kw[f.name] = jnp.asarray([getattr(h, f.name) for h in hws],
+                                 dtype=dtypes[f.name])
     return HWParams(**kw)
+
+
+_LAZY_DATA_DTYPES = {
+    "use_dbi": jnp.bool_,
+    "dbi_interval_cycles": jnp.float32,
+    "dbi_lines_per_fire": jnp.int32,
+    "commit_exposure": jnp.float32,
+}
+_LAZY_STATIC_FIELDS = ("partial_commits", "cpuws_regs", "max_rollbacks")
+
+
+def stack_lazy(cfgs: list[LazyPIMConfig]) -> LazyPIMConfig:
+    """Stack LazyPIMConfigs into one pytree with (S,)-shaped numeric leaves.
+
+    Only the traced knobs may vary: the static flags (``partial_commits``,
+    ``cpuws_regs``, ``max_rollbacks``) select a different compiled dataflow,
+    so a stack mixing them is rejected with a ``ValueError`` naming the
+    offending entry — run one study/sweep per static-flag combo instead.
+    """
+    c0 = cfgs[0]
+    for i, c in enumerate(cfgs[1:], start=1):
+        for f in _LAZY_STATIC_FIELDS:
+            if getattr(c, f) != getattr(c0, f):
+                raise ValueError(
+                    f"lazy config [{i}] has static {f}={getattr(c, f)!r} != "
+                    f"{getattr(c0, f)!r} of config [0]: static flags select "
+                    f"a different compiled dataflow and cannot share one "
+                    f"stacked sweep")
+    kw = {f: getattr(c0, f) for f in _LAZY_STATIC_FIELDS}
+    for name, dt in _LAZY_DATA_DTYPES.items():
+        kw[name] = jnp.asarray([getattr(c, name) for c in cfgs], dtype=dt)
+    return LazyPIMConfig(**kw)
 
 
 def stack_traces(tts: list[TraceTensors]) -> TraceTensors:
@@ -129,10 +162,10 @@ def stack_traces(tts: list[TraceTensors]) -> TraceTensors:
     All traces must share geometry metadata (line/window/kernel counts,
     access-slot widths and signature spec — they select the compiled
     shapes); raw mismatched-geometry stacks are rejected with a
-    ``ValueError`` — route mixed fleets through :func:`run_batch`, whose
-    bucketing layer (:func:`repro.sim.prep.bucket_traces`) pads them onto
-    shared bucket shapes first.  ``name``/``threads`` are taken from the
-    first trace; the locality constants (``cpu_reuse``,
+    ``ValueError`` — route mixed fleets through :func:`run_batch` or a
+    ``Study``, whose bucketing layer (:func:`repro.sim.prep.bucket_traces`)
+    pads them onto shared bucket shapes first.  ``name``/``threads`` are
+    taken from the first trace; the locality constants (``cpu_reuse``,
     ``cpu_priv_miss_rate``) are traced scalar leaves and stack per point
     like every other tensor.
     """
@@ -152,20 +185,30 @@ def stack_traces(tts: list[TraceTensors]) -> TraceTensors:
     return TraceTensors(**fields)
 
 
+# ---------------------------------------------------------------------------
+# Stacked dispatch: one jitted+vmapped scan per mechanism
+# ---------------------------------------------------------------------------
+
+
 @functools.lru_cache(maxsize=None)
 def _sweep_fn(mechanism: str):
     """One jitted, vmapped window-scan per mechanism (cached).  The jit cache
-    size of the returned function IS the sweep compile count."""
+    size of the returned function IS the sweep compile count.  The LazyPIM
+    config is vmapped like the trace/hardware pytrees (its numeric leaves
+    arrive stacked from :func:`stack_lazy`), so a lazy-ablation axis rides
+    the same stacked dispatch as an hw sweep."""
     if mechanism == "lazypim":
-        return jax.jit(jax.vmap(_lazypim_acc, in_axes=(0, 0, None)))
+        return jax.jit(jax.vmap(_lazypim_acc, in_axes=(0, 0, 0)))
     return jax.jit(jax.vmap(ACC_FNS[mechanism], in_axes=(0, 0)))
 
 
 def sweep_cache_sizes(mechanisms: tuple[str, ...] = MECHANISMS) -> dict[str, int]:
     """Measured XLA compile count per mechanism's sweep function (0 if the
-    sweep function has never run).  :func:`run_batch` executes through the
-    same functions, so for a bucketed fleet run the delta of these counts is
-    the batch engine's measured compile cost."""
+    sweep function has never run).  Every batched engine — ``run_sweep``,
+    ``run_batch``, the ``Study`` planner — executes through the same
+    functions, so the delta of these counts across a run is that run's
+    measured compile cost (cross-checked against ``Study.plan()`` by
+    ``benchmarks/check_budget.py --live``)."""
     return {m: _sweep_fn(m)._cache_size() for m in mechanisms}
 
 
@@ -184,6 +227,24 @@ def sequential_cache_sizes(
     return {m: jits[m]._cache_size() for m in mechanisms}
 
 
+def _sweep_accs(
+    stt: TraceTensors,
+    shw: HWParams,
+    mechanisms: tuple[str, ...],
+    scfg: LazyPIMConfig,
+) -> dict[str, dict]:
+    """Dispatch one stacked execution per mechanism; return host-side
+    accumulator dicts with a leading point axis.  THE shared dispatch of
+    every batched engine: ``run_sweep`` finalizes its output per point, the
+    ``Study`` planner per (bucket, lane)."""
+    out = {}
+    for m in mechanisms:
+        fn = _sweep_fn(m)
+        acc = fn(stt, shw, scfg) if m == "lazypim" else fn(stt, shw)
+        out[m] = {k: jax.device_get(v) for k, v in acc.items()}
+    return out
+
+
 def run_sweep(
     tt: TraceTensors,
     hw: HWParams,
@@ -194,34 +255,31 @@ def run_sweep(
 
     ``tt``/``hw`` carry a leading sweep axis S on every tensor leaf (from
     :func:`stack_traces` / :func:`stack_hw`; a single trace can be tiled via
-    ``stack_traces([tt] * S)``).  Returns one ``{mechanism: SimResult}``
-    dict per sweep point — the same values, bit-for-bit, as S sequential
-    :func:`run_all` calls (differentially tested), but compiled once per
-    mechanism regardless of S.
+    ``stack_traces([tt] * S)``).  ``lazy_cfg`` is one config applied to
+    every point (its leaves are broadcast onto the sweep axis; pass a
+    per-point lazy axis through a ``Study`` instead).  Returns one
+    ``{mechanism: SimResult}`` dict per sweep point — the same values,
+    bit-for-bit, as S sequential :func:`run_all` calls (differentially
+    tested), but compiled once per mechanism regardless of S.
     """
     if not mechanisms:
         return []
     lazy_cfg = lazy_cfg or LazyPIMConfig()
+    num_points = jax.tree_util.tree_leaves(hw)[0].shape[0]
     ntt = neutral_trace(tt)  # jit keys on geometry, not the workload name
-    num_points = None
-    out_by_mech: dict[str, dict] = {}
-    for m in mechanisms:
-        fn = _sweep_fn(m)
-        acc = fn(ntt, hw, lazy_cfg) if m == "lazypim" else fn(ntt, hw)
-        acc = {k: jax.device_get(v) for k, v in acc.items()}
-        num_points = len(next(iter(acc.values())))
-        out_by_mech[m] = acc
+    scfg = stack_lazy([lazy_cfg] * num_points)
+    accs = _sweep_accs(ntt, hw, mechanisms, scfg)
     points: list[dict[str, SimResult]] = []
     for i in range(num_points):
         points.append({
             m: _finalize(tt, m, {k: v[i] for k, v in acc.items()})
-            for m, acc in out_by_mech.items()
+            for m, acc in accs.items()
         })
     return points
 
 
 # ---------------------------------------------------------------------------
-# Geometry-bucketed fleet batch engine
+# Geometry-bucketed fleet batch engine (a thin wrapper over the planner)
 # ---------------------------------------------------------------------------
 
 
@@ -234,66 +292,32 @@ def run_batch(
     """Run a whole workload fleet with one compiled scan per (mechanism,
     geometry bucket).
 
-    The fleet is grouped by :func:`repro.sim.prep.bucket_traces` (pow2-ish
-    line-count buckets; windows/kernels/slot widths padded to per-bucket
-    maxima under explicit validity masks), each bucket is stacked along a
-    leading workload axis and executed through the same jitted+vmapped step
-    functions :func:`run_sweep` uses — so the measured compile count
-    (:func:`sweep_cache_sizes`) is at most ``len(mechanisms) × num_buckets``
-    for any fleet size.  Results come back per input workload, in input
-    order, and are bit-exact with sequential :func:`run_all` on every
-    ``SimResult`` field (differentially tested in
-    ``tests/test_batch_engine.py``).
-
-    ``hw`` is one HWParams applied fleet-wide, or a list aligned with
-    ``tts`` (one per workload) — the hook that composes the hw-axis sweep
-    with the workload axis: an hw × workload cross-product is expressed by
-    repeating the fleet per hw point, still one compile per (mechanism,
-    bucket).
+    Thin wrapper over the ``Study`` planner (:mod:`repro.sim.study`): the
+    fleet becomes a study over prepared traces, ``hw`` one HWParams applied
+    fleet-wide or a list aligned with ``tts`` (one per workload — the hook
+    that composes an hw axis with the workload axis), and results come back
+    per input workload, in input order — bit-exact with sequential
+    :func:`run_all` on every ``SimResult`` field (differentially tested in
+    ``tests/test_batch_engine.py``), at most ``len(mechanisms) ×
+    num_buckets`` measured compiles for any fleet size.
     """
+    from repro.sim.study import Study
+
     if not tts:
         return []
-    if hw is None or isinstance(hw, HWParams):
-        hws = [hw or HWParams()] * len(tts)
-    else:
-        hws = list(hw)
-        if len(hws) != len(tts):
-            raise ValueError(f"hw list length {len(hws)} != fleet size {len(tts)}")
-    lazy_cfg = lazy_cfg or LazyPIMConfig()
-    results: list[dict[str, SimResult]] = [{} for _ in tts]
-    for idx, padded in bucket_traces(tts):
-        stacked = neutral_trace(stack_traces(padded))
-        shw = stack_hw([hws[i] for i in idx])
-        for m in mechanisms:
-            fn = _sweep_fn(m)
-            acc = fn(stacked, shw, lazy_cfg) if m == "lazypim" else fn(stacked, shw)
-            acc = {k: jax.device_get(v) for k, v in acc.items()}
-            for j, i in enumerate(idx):
-                results[i][m] = SimResult(
-                    name=tts[i].name, mechanism=m,
-                    **{k: float(v[j]) for k, v in acc.items()})
-    return results
+    if hw is not None and not isinstance(hw, HWParams):
+        hw = list(hw)
+        if len(hw) != len(tts):
+            raise ValueError(f"hw list length {len(hw)} != fleet size {len(tts)}")
+    study = Study(workloads=tts, hw=hw, mechanisms=mechanisms, lazy=lazy_cfg)
+    return [p.results for p in study.run().points]
 
 
-def batch_plan(tts: list[TraceTensors]) -> list[dict]:
-    """Human-readable bucket summary for a fleet (benchmarks / ROADMAP):
-    per bucket the padded geometry, member count and padding overhead.
-    Shape-only — no padded trace is materialized."""
-    plan = []
-    for idx, shape in bucket_shapes(tts):
-        real = sum(tts[i].num_lines for i in idx)
-        plan.append(dict(
-            num_lines=shape["num_lines"], num_windows=shape["num_windows"],
-            num_kernels=shape["num_kernels"],
-            workloads=[tts[i].name for i in idx],
-            line_pad_overhead=shape["num_lines"] * len(idx) / max(real, 1),
-        ))
-    return plan
-
-
-def summarize(results: dict[str, SimResult], hw: HWParams) -> dict[str, dict]:
-    """Normalize every mechanism to CPU-only (the paper's presentation)."""
-    base = results["cpu"]
+def summarize(results: dict[str, SimResult], hw: HWParams,
+              to: str = "cpu") -> dict[str, dict]:
+    """Normalize every mechanism to a baseline (the paper normalizes to
+    CPU-only).  ``ResultSet.normalized`` applies this per study point."""
+    base = results[to]
     base_e = base.energy_pj(hw)["total"]
     out = {}
     for m, r in results.items():

@@ -60,7 +60,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -813,7 +812,7 @@ def bucket_shapes(
 ) -> list[tuple[list[int], dict[str, int]]]:
     """Bucket membership and padded target shapes for a fleet — the
     grouping policy behind :func:`bucket_traces`, without materializing any
-    padded trace (cheap: used by ``engine.batch_plan`` summaries).
+    padded trace (cheap: used by ``repro.sim.study.Study.plan`` summaries).
 
     The bucket key is ``(bucket_bound(num_lines), spec)`` — pow2-ish line
     rounding so near-miss geometries share one compiled scan; windows,

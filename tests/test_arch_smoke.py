@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCHS, get_smoke_config
-from repro.models.frontends import synth_embeddings, frontend_tokens
+from repro.models.frontends import synth_embeddings
 from repro.models.model import Model
 
 B, S = 2, 16

@@ -1,0 +1,88 @@
+"""Golden regression for fig12 (the partial- vs full-commit ablation).
+
+Fig12 moved onto the ``Study`` planner's bucketed fast path in the API
+redesign; this golden pins its combined ``ResultSet`` (partial- then
+full-commit points, serialized by ``ResultSet.save_json``) so a planner,
+padding, or protocol regression shows up as a tier-1 failure instead of a
+silently shifted ablation table.
+
+The fig12 quantities — the conflict *rates* — are asserted to 1e-6
+relative; the raw accumulator magnitudes to 1e-4 (float32 sums, same
+contract as ``tests/test_golden_figures.py``).
+
+Regenerate (only after an *intentional* model change) with:
+
+    PYTHONPATH=src python -m tests.test_fig12_golden
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+import pytest
+
+from repro.api import ResultSet
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / "fig12_golden.json"
+RATE_RTOL = 1e-6
+RAW_RTOL = 1e-4
+
+
+def _current() -> ResultSet:
+    from benchmarks.fig12_partial_commits import result_set
+
+    return result_set()
+
+
+def _rel(a: float, b: float) -> float:
+    return abs(a - b) / max(abs(b), 1e-12)
+
+
+@pytest.fixture(scope="module")
+def current():
+    return _current()
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return ResultSet.load_json(GOLDEN_PATH)
+
+
+def test_fig12_coordinates_match_golden(current, golden):
+    assert len(current.points) == len(golden.points)
+    for c, g in zip(current.points, golden.points):
+        assert c.workload == g.workload
+        assert c.lazy.partial_commits == g.lazy.partial_commits
+
+
+def test_fig12_conflict_rates_match_golden(current, golden):
+    for c, g in zip(current.points, golden.points):
+        cr, gr = c.results["lazypim"], g.results["lazypim"]
+        label = f"{c.workload}/partial={c.lazy.partial_commits}"
+        assert _rel(cr.conflict_rate, gr.conflict_rate) < RATE_RTOL, label
+        assert _rel(cr.conflict_rate_exact,
+                    gr.conflict_rate_exact) < RATE_RTOL, label
+
+
+def test_fig12_raw_accumulators_match_golden(current, golden):
+    import dataclasses
+
+    for c, g in zip(current.points, golden.points):
+        want = dataclasses.asdict(g.results["lazypim"])
+        got = dataclasses.asdict(c.results["lazypim"])
+        for key, gv in want.items():
+            if isinstance(gv, str):
+                assert got[key] == gv, key
+                continue
+            label = f"{c.workload}/partial={c.lazy.partial_commits}/{key}"
+            assert _rel(got[key], gv) < RAW_RTOL, \
+                f"{label}: {got[key]!r} != golden {gv!r}"
+
+
+def main():
+    _current().save_json(GOLDEN_PATH)
+    print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,6 @@ Invariants, for every family × seed × thread count drawn:
 from __future__ import annotations
 
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st

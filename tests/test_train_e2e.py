@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import argparse
 
-import pytest
 
 
 def _args(tmp_path, **kw):
