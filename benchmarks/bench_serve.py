@@ -1,0 +1,169 @@
+"""Serve-layer benchmark: request storm under fault injection + crash-safe
+warm-restart of the fig7 fleet.
+
+    PYTHONPATH=src python -m benchmarks.run --bench serve
+
+Two legs, one ``BENCH_serve.json`` record:
+
+* **storm** — a resident :class:`repro.serve.StudyServer` on the wall
+  clock answers a synthetic storm of small study requests with 10%
+  injected faults (all five chaos classes).  Reports p50/p99 served-study
+  latency, steady-state studies/sec, and the outcome histogram — the
+  service-level claim that fault handling costs the fault, not the fleet.
+* **warm_restart** — serve THE fig7 study cold (the full 18-compile
+  fleet), simulate a worker crash (in-process jit caches wiped), restart
+  from the persistent compile cache + warm manifest, and re-answer fig7.
+  Records cold/warm timings and the measured post-restart scan-compile
+  count, which must be **zero** (gated by ``benchmarks.check_budget``
+  against the committed record, like the fleet compile budget).
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.timing import write_bench_json
+from repro.serve import (
+    ChaosConfig,
+    ChaosMonkey,
+    ServeConfig,
+    StudyServer,
+    make_storm,
+    restart_server,
+)
+from repro.sim import engine as _engine
+
+STORM_N = 60
+STORM_SEED = 0
+FAULT_RATE = 0.10
+
+_SMALL = dict(num_kernels=3, windows_per_kernel=2)
+BASE_SPECS = [
+    {"workloads": [{"app": "pagerank", "graph": "arxiv", "scale": 0.4,
+                    **_SMALL}],
+     "mechanisms": ["cpu", "cg", "lazypim"], "threads": 16},
+    {"workloads": [{"app": "htap128", "scale": 0.004, **_SMALL}],
+     "mechanisms": ["cpu", "cg", "lazypim"], "threads": 16},
+]
+
+
+def bench_storm() -> dict:
+    cache_dir = tempfile.mkdtemp(prefix="repro-serve-storm-")
+    # Real-time chaos: the hang must outlive the heartbeat timeout for
+    # detection; the timeout must in turn outlive legitimate inter-beat
+    # gaps (trace synthesis before the first dispatch of a request).
+    monkey = ChaosMonkey(
+        ChaosConfig(seed=STORM_SEED, fault_rate=FAULT_RATE, hang_s=12.0))
+    cfg = ServeConfig(default_deadline_s=300.0, heartbeat_timeout_s=10.0,
+                      backoff_base_s=0.01, backoff_cap_s=0.1,
+                      max_queue=STORM_N, max_lanes=64, cache_dir=cache_dir)
+    srv = StudyServer(cfg, chaos=monkey)
+    monkey.clock = srv.clock
+
+    # Pre-warm the two base geometries outside the measured storm (compile
+    # time is the engine benchmark's subject, not the serve loop's).
+    for rid, spec in enumerate(BASE_SPECS):
+        monkey.exempt.add(rid)
+        srv.submit(spec)
+    assert all(r.served for r in srv.drain())
+
+    storm = make_storm(monkey, STORM_N, BASE_SPECS,
+                       first_rid=srv._next_rid)
+    t0 = time.perf_counter()
+    final = {}
+    for spec in storm:
+        out = srv.submit(spec)
+        if not isinstance(out, int):
+            final[out.rid] = out
+    for r in srv.drain():
+        final[r.rid] = r
+    restarts = 0
+    while srv.crashed:
+        restarts += 1
+        srv, replayed = restart_server(cfg, chaos=monkey)
+        for r in [*replayed, *srv.drain()]:
+            final[r.rid] = r
+    wall_s = time.perf_counter() - t0
+
+    served = [r for r in final.values() if r.served]
+    lat = np.array([r.latency_s for r in served])
+    outcomes = {}
+    for r in final.values():
+        outcomes[r.status] = outcomes.get(r.status, 0) + 1
+    injected = {}
+    for _, kind in monkey.injected:
+        injected[kind] = injected.get(kind, 0) + 1
+    return {
+        "n_requests": STORM_N,
+        "seed": STORM_SEED,
+        "fault_rate": FAULT_RATE,
+        "outcomes": outcomes,
+        "injected": injected,
+        "worker_restarts": restarts,
+        "served": len(served),
+        "p50_latency_s": round(float(np.percentile(lat, 50)), 6),
+        "p99_latency_s": round(float(np.percentile(lat, 99)), 6),
+        "studies_per_s": round(len(served) / wall_s, 3),
+        "storm_wall_s": round(wall_s, 3),
+    }
+
+
+def bench_warm_restart() -> dict:
+    from benchmarks.fig7_speedup import study as fig7_study
+
+    cache_dir = tempfile.mkdtemp(prefix="repro-serve-warm-")
+    cfg = ServeConfig(default_deadline_s=3600.0, cache_dir=cache_dir)
+
+    srv = StudyServer(cfg)
+    t0 = time.perf_counter()
+    srv.submit(fig7_study())
+    assert srv.drain()[0].status == "ok"
+    cold_s = time.perf_counter() - t0
+    manifest = srv.warm.load_manifest()
+
+    # Crash: the process's jit caches die; disk cache + manifest survive.
+    _engine._sweep_fn.cache_clear()
+    t0 = time.perf_counter()
+    srv2, _ = restart_server(cfg)
+    warm_boot_s = time.perf_counter() - t0
+
+    before = dict(_engine.sweep_cache_sizes())
+    t0 = time.perf_counter()
+    srv2.submit(fig7_study())
+    assert srv2.drain()[0].status == "ok"
+    warm_serve_s = time.perf_counter() - t0
+    after = dict(_engine.sweep_cache_sizes())
+    new_compiles = sum(after.values()) - sum(before.values())
+    assert new_compiles == 0, \
+        f"warm restart recompiled {new_compiles} scans"
+    return {
+        "manifest_entries": len(manifest),
+        "persistent_cache": srv2.warm.persistent,
+        "cold_serve_s": round(cold_s, 2),
+        "warm_boot_s": round(warm_boot_s, 2),
+        "warm_serve_s": round(warm_serve_s, 2),
+        "new_scan_compiles_after_restart": new_compiles,
+    }
+
+
+def main() -> None:
+    storm = bench_storm()
+    print(f"storm: {storm['served']}/{storm['n_requests']} served, "
+          f"p50 {storm['p50_latency_s'] * 1e3:.1f} ms, "
+          f"p99 {storm['p99_latency_s'] * 1e3:.1f} ms, "
+          f"{storm['studies_per_s']:.1f} studies/s, "
+          f"outcomes {storm['outcomes']}")
+    warm = bench_warm_restart()
+    print(f"warm restart: {warm['manifest_entries']} manifest entries, "
+          f"cold {warm['cold_serve_s']}s -> boot {warm['warm_boot_s']}s + "
+          f"serve {warm['warm_serve_s']}s, "
+          f"{warm['new_scan_compiles_after_restart']} new scan compiles")
+    path = write_bench_json("serve", {"storm": storm, "warm_restart": warm})
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,10 @@ The always-on counterpart inside tier-1 is
 (structural form) plus ``tests/test_study.py`` (plan-vs-measured on a
 small study).
 
+The committed ``BENCH_serve.json`` is gated alongside it: a post-crash warm
+restart of the serve layer must show zero new scan compiles
+(:func:`check_serve`).
+
 Usage: python -m benchmarks.check_budget [--live] [path-to-BENCH_engine.json]
 """
 
@@ -65,6 +69,38 @@ def check_committed(path: pathlib.Path) -> int:
     return 0
 
 
+def check_serve(path: pathlib.Path) -> int:
+    """Gate the committed serve benchmark record: a post-crash warm restart
+    must answer the fig7 study with ZERO new scan compiles (the crash-safe
+    recovery claim), and the warm manifest cannot exceed the fleet compile
+    budget (one entry per (mechanism, bucket) compile)."""
+    try:
+        record = json.loads(path.read_text())
+    except FileNotFoundError:
+        print(f"check_budget: {path} not found — run "
+              f"`python -m benchmarks.run --bench serve`", file=sys.stderr)
+        return 1
+    warm = record.get("warm_restart")
+    if not warm:
+        print(f"check_budget: no warm_restart section in {path}",
+              file=sys.stderr)
+        return 1
+    compiles = warm["new_scan_compiles_after_restart"]
+    entries = warm["manifest_entries"]
+    print(f"check_budget: serve warm restart: {entries} manifest entries, "
+          f"{compiles} new scan compiles after restart "
+          f"(budget: 0 new, <= {FLEET_COMPILE_BUDGET} entries)")
+    if compiles != 0:
+        print(f"check_budget: warm restart RECOMPILED {compiles} scans — "
+              f"crash-safe recovery is broken", file=sys.stderr)
+        return 1
+    if entries > FLEET_COMPILE_BUDGET:
+        print(f"check_budget: warm manifest holds {entries} entries > "
+              f"fleet budget {FLEET_COMPILE_BUDGET}", file=sys.stderr)
+        return 1
+    return 0
+
+
 def check_live() -> int:
     """Predicted-vs-measured compile budget for the fig7 study, end to end.
     Must run in a fresh process (cold jit caches): the prediction is the
@@ -101,9 +137,11 @@ def main(argv: list[str]) -> int:
     live = "--live" in args
     if live:
         args.remove("--live")
-    path = pathlib.Path(args[0]) if args else \
-        pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
+    root = pathlib.Path(__file__).resolve().parent.parent
+    path = pathlib.Path(args[0]) if args else root / "BENCH_engine.json"
     rc = check_committed(path)
+    if rc == 0:
+        rc = check_serve(root / "BENCH_serve.json")
     if rc == 0 and live:
         rc = check_live()
     return rc

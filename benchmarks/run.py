@@ -30,6 +30,7 @@ MODULES = (
 BENCHES = {
     "signatures": "bench_signatures",
     "engine": "bench_engine",
+    "serve": "bench_serve",
 }
 
 

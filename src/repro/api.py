@@ -34,6 +34,7 @@ from repro.sim.engine import (
 )
 from repro.sim.prep import TraceTensors, prepare
 from repro.sim.study import (
+    Dispatch,
     HWGrid,
     ResultSet,
     Study,
@@ -47,7 +48,7 @@ from repro.sim.trace import all_workloads, make_trace
 
 __all__ = [
     "Study", "StudyPlan", "StudyPoint", "ResultSet",
-    "Workload", "workload", "HWGrid", "grid",
+    "Workload", "workload", "HWGrid", "grid", "Dispatch",
     "HWParams", "LazyPIMConfig", "SignatureSpec",
     "SimResult", "TraceTensors", "MECHANISMS",
     "run_all", "run_batch", "run_sweep", "run_workload", "summarize",

@@ -8,6 +8,18 @@ Implements the serving-side substrate: a request queue, batched prefill
 per-request stop handling; finished slots are refilled from the queue
 (continuous batching).  On a pod the same step functions run under pjit
 with the decode-cache shardings from ``launch.steps``.
+
+``--study`` switches the driver to the resident *study* service
+(:mod:`repro.serve`): read a JSON file holding one study-request spec (or
+a list of them), answer each through the hardened request loop — retries,
+degradation, crash-safe restart — and print one status line per request::
+
+    PYTHONPATH=src python -m repro.launch.serve --study requests.json \\
+        --cache-dir .serve_cache [--chaos-rate 0.1] [--deadline-s 300]
+
+With ``--cache-dir`` the server journals admitted requests and keeps the
+persistent compile cache + warm manifest there, so a re-launch answers
+repeat studies without recompiling a single scan.
 """
 
 from __future__ import annotations
@@ -111,6 +123,54 @@ def serve(args) -> list[Request]:
     return served
 
 
+def serve_study(args) -> list:
+    """The resident study service: answer the request specs in
+    ``args.study`` (a JSON file holding one spec dict or a list of them)
+    through the hardened loop, restarting from the warm compile cache if
+    the worker crashes.  Returns the terminal responses in rid order."""
+    import json
+    import pathlib
+
+    from repro.serve import (ChaosConfig, ChaosMonkey, ServeConfig,
+                             StudyServer, restart_server)
+
+    specs = json.loads(pathlib.Path(args.study).read_text())
+    if isinstance(specs, dict):
+        specs = [specs]
+    cfg = ServeConfig(default_deadline_s=args.deadline_s,
+                      max_queue=args.max_queue, cache_dir=args.cache_dir,
+                      seed=args.seed)
+    chaos = None
+    if args.chaos_rate > 0:
+        chaos = ChaosMonkey(ChaosConfig(seed=args.seed,
+                                        fault_rate=args.chaos_rate))
+    server = StudyServer(cfg, chaos=chaos)
+    if chaos is not None:
+        chaos.clock = server.clock
+    final = {}
+    for spec in specs:
+        out = server.submit(spec)
+        if not isinstance(out, int):
+            final[out.rid] = out
+    for r in server.drain():
+        final[r.rid] = r
+    while server.crashed:
+        print("worker crashed — restarting from the warm compile cache")
+        server, replayed = restart_server(cfg, chaos=chaos)
+        for r in [*replayed, *server.drain()]:
+            final[r.rid] = r
+    for rid in sorted(final):
+        r = final[rid]
+        extra = f" ({r.error})" if r.error else ""
+        print(f"req {rid}: {r.status} engine={r.engine} "
+              f"attempts={r.attempts} {r.latency_s * 1e3:.0f} ms{extra}")
+    counts: dict[str, int] = {}
+    for r in final.values():
+        counts[r.status] = counts.get(r.status, 0) + 1
+    print(f"served {len(final)} requests: {counts}")
+    return [final[rid] for rid in sorted(final)]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
@@ -120,7 +180,20 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--study", default=None, metavar="SPECS_JSON",
+                    help="serve study requests from this JSON file instead "
+                         "of running the token-serving driver")
+    ap.add_argument("--cache-dir", default=None,
+                    help="journal + persistent compile cache + warm "
+                         "manifest directory (enables crash-safe restart)")
+    ap.add_argument("--deadline-s", type=float, default=300.0)
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--chaos-rate", type=float, default=0.0,
+                    help="inject this fraction of chaos faults (testing)")
     args = ap.parse_args()
+    if args.study:
+        serve_study(args)
+        return
     served = serve(args)
     assert len(served) == args.requests
 

@@ -44,9 +44,9 @@ def run(args) -> dict:
     opt_state = adamw.init(params, opt_cfg)
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-    start = 0
+    start, restored_step = 0, None
     if ckpt and ckpt.latest_step() is not None:
-        start = ckpt.latest_step()
+        start = restored_step = ckpt.latest_step()
         state = ckpt.restore(start, {"params": params, "opt": opt_state})
         params, opt_state = state["params"], state["opt"]
         print(f"restored checkpoint at step {start}")
@@ -85,7 +85,8 @@ def run(args) -> dict:
             ckpt.save(step, {"params": params, "opt": opt_state})
     if ckpt:
         ckpt.wait()
-    return {"first_loss": losses[0], "last_loss": losses[-1], "losses": losses}
+    return {"first_loss": losses[0], "last_loss": losses[-1], "losses": losses,
+            "restored_step": restored_step}
 
 
 def main():

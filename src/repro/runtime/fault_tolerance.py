@@ -43,6 +43,17 @@ class HeartbeatMonitor:
         now = time.monotonic() if now is None else now
         return [h for h, t in self._last.items() if now - t > self.timeout_s]
 
+    def remove_host(self, host: int) -> None:
+        """Forget a host entirely — the restart path MUST call this after it
+        has handled a death (cordon + replace / re-mesh), or the monitor
+        reports the dead host forever: ``dead_hosts()`` keeps flagging it on
+        every check and ``min_step()`` keeps clamping global progress to its
+        last step, so one transient death would poison every subsequent
+        health check.  Unknown hosts are a no-op (a host may die before its
+        first beat)."""
+        self._last.pop(host, None)
+        self._step.pop(host, None)
+
     def min_step(self) -> int:
         return min(self._step.values()) if self._step else 0
 

@@ -1,0 +1,78 @@
+"""repro.serve — the resilient resident study service.
+
+A long-lived server wrapping the Study planner in a hardened request
+loop: bounded-queue admission with load shedding, per-request deadlines,
+retry with deterministic backoff, graceful degradation to the sequential
+reference engine, and crash-safe warm-compile recovery.  The deterministic
+fault-injection harness lives in :mod:`repro.serve.chaos`.
+"""
+
+from repro.serve.chaos import (
+    FAULT_CLASSES,
+    ChaosConfig,
+    ChaosMonkey,
+    InjectedEngineError,
+    SimulatedCrash,
+    make_storm,
+)
+from repro.serve.clock import VirtualClock, WallClock
+from repro.serve.queueing import BoundedQueue
+from repro.serve.request import (
+    CRASHED,
+    FAILED,
+    OK,
+    OK_DEGRADED,
+    REJECTED,
+    REJECTED_MALFORMED,
+    REJECTED_OVERLOAD,
+    REJECTED_OVERSIZED,
+    SERVED,
+    TERMINAL,
+    TIMEOUT,
+    Response,
+    StudyRequest,
+    build_study,
+)
+from repro.serve.retry import RetryPolicy
+from repro.serve.server import (
+    WORKER,
+    DeadlineExceeded,
+    ServeConfig,
+    StudyServer,
+    restart_server,
+)
+from repro.serve.warm import WarmCache, enable_persistent_cache
+
+__all__ = [
+    "FAULT_CLASSES",
+    "ChaosConfig",
+    "ChaosMonkey",
+    "InjectedEngineError",
+    "SimulatedCrash",
+    "make_storm",
+    "VirtualClock",
+    "WallClock",
+    "BoundedQueue",
+    "CRASHED",
+    "FAILED",
+    "OK",
+    "OK_DEGRADED",
+    "REJECTED",
+    "REJECTED_MALFORMED",
+    "REJECTED_OVERLOAD",
+    "REJECTED_OVERSIZED",
+    "SERVED",
+    "TERMINAL",
+    "TIMEOUT",
+    "Response",
+    "StudyRequest",
+    "build_study",
+    "RetryPolicy",
+    "WORKER",
+    "DeadlineExceeded",
+    "ServeConfig",
+    "StudyServer",
+    "restart_server",
+    "WarmCache",
+    "enable_persistent_cache",
+]

@@ -1,0 +1,333 @@
+"""The resident study server: a hardened request loop over the planner.
+
+One long-lived :class:`StudyServer` answers many small ``Study`` requests
+from warm executables (the ROADMAP's "millions of users, heavy traffic"
+shape: many small studies, one hot cache).  The loop is cooperative and
+single-worker — ``submit`` admits, ``step`` serves one request — which
+keeps every failure decision deterministic and lets the chaos harness
+replay a whole storm bit-for-bit.  The hardening layers, in request order:
+
+* **Admission control** — malformed specs are rejected with the planner's
+  own naming ``ValueError``; oversized requests are rejected by the lane
+  bound (``Study.num_points`` — computed *without* synthesizing a trace);
+  a full queue sheds load immediately (:mod:`repro.serve.queueing`).
+* **Deadline + hang detection** — every engine dispatch is a cancellation
+  point (:meth:`repro.sim.study.Study.run`'s ``on_dispatch`` boundary):
+  past-deadline requests abort with ``timeout``, and a worker whose
+  heartbeat goes stale (:class:`~repro.runtime.fault_tolerance
+  .HeartbeatMonitor`) is flagged, cordoned (``remove_host`` — the restart
+  path MUST forget the dead worker or the monitor poisons every later
+  request) and replaced.
+* **Retry with backoff** — transient engine failures are retried with
+  capped exponential backoff + deterministic Threefry jitter
+  (:mod:`repro.serve.retry`).
+* **Graceful degradation** — when the batched engine keeps failing, the
+  request falls back to the sequential reference engine, which computes
+  the *same numbers bit-for-bit* (the PR-4 cross-engine harness), so a
+  degraded answer is never a wrong answer.
+* **Crash-safe warm restart** — admitted JSON requests are journaled;
+  served studies' planner tuples are recorded in the warm manifest
+  (:mod:`repro.serve.warm`).  After a crash, :func:`restart_server`
+  rebuilds the server, re-warms every recorded (mechanism, bucket,
+  static-flag) scan from the persistent compile cache, and re-answers the
+  journaled requests — zero new scan compiles for previously seen studies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import Counter
+
+from repro.runtime.fault_tolerance import (
+    HeartbeatMonitor,
+    RestartPolicy,
+    StragglerDetector,
+)
+from repro.serve import request as _rq
+from repro.serve.chaos import ChaosMonkey, SimulatedCrash
+from repro.serve.clock import WallClock
+from repro.serve.queueing import BoundedQueue
+from repro.serve.request import Response, StudyRequest, build_study
+from repro.serve.retry import RetryPolicy
+from repro.serve.warm import WarmCache
+
+WORKER = 0  # host id of the single in-process worker in the monitors
+JOURNAL_NAME = "journal.json"
+
+
+class DeadlineExceeded(Exception):
+    """Raised at a cancellation point: deadline passed or worker hung."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_queue: int = 64             # bounded backlog; beyond it, shed
+    max_lanes: int = 4096           # admission bound on folded lane count
+    default_deadline_s: float = 300.0
+    max_attempts: int = 3           # batched attempts before degrading
+    backoff_base_s: float = 0.05
+    backoff_cap_s: float = 2.0
+    heartbeat_timeout_s: float = 30.0
+    cache_dir: str | None = None    # persistent compile cache + journal
+    warm_on_start: bool = True      # replay the warm manifest at boot
+    seed: int = 0                   # retry-jitter stream
+
+
+class StudyServer:
+    def __init__(self, cfg: ServeConfig | None = None, *, clock=None,
+                 chaos: ChaosMonkey | None = None):
+        self.cfg = cfg or ServeConfig()
+        self.clock = clock or WallClock()
+        self.chaos = chaos
+        self.queue = BoundedQueue(self.cfg.max_queue)
+        self.retry = RetryPolicy(max_attempts=self.cfg.max_attempts,
+                                 base_s=self.cfg.backoff_base_s,
+                                 cap_s=self.cfg.backoff_cap_s,
+                                 seed=self.cfg.seed)
+        self.hb = HeartbeatMonitor(timeout_s=self.cfg.heartbeat_timeout_s)
+        self.stragglers = StragglerDetector()
+        # One logical worker host with 4 devices out of a 2-host pool: a
+        # worker death/hang costs half the pool, which RestartPolicy maps
+        # to a remesh (replace the worker), not a halt.
+        self.restart_policy = RestartPolicy(total_devices=8, min_devices=4)
+        self.warm = WarmCache(self.cfg.cache_dir) if self.cfg.cache_dir \
+            else None
+        self.crashed = False
+        self.responses: dict[int, Response] = {}
+        self.stats = Counter()
+        self.restart_plans: list[dict] = []
+        self._next_rid = 0
+        self._journal: dict[int, dict] = {}
+        if self.warm:
+            self._journal_load()
+            if self.cfg.warm_on_start:
+                self.stats["warmed_entries"] = self.warm.warm_from_manifest()
+
+    # -- journal (crash safety for admitted JSON requests) ------------------
+
+    def _journal_path(self):
+        return self.warm.dir / JOURNAL_NAME
+
+    def _journal_load(self):
+        path = self._journal_path()
+        if path.exists():
+            data = json.loads(path.read_text())
+            self._journal = {int(k): v for k, v in data["inflight"].items()}
+            self._next_rid = max(data["next_rid"],
+                                 max(self._journal, default=-1) + 1)
+
+    def _journal_save(self):
+        if self.warm is None:
+            return
+        tmp = self._journal_path().with_suffix(".tmp")
+        tmp.write_text(json.dumps(
+            {"next_rid": self._next_rid,
+             "inflight": {str(k): v for k, v in self._journal.items()}},
+            indent=2) + "\n")
+        tmp.replace(self._journal_path())
+
+    def _journal_add(self, req: StudyRequest):
+        if self.warm is not None and req.spec is not None:
+            self._journal[req.rid] = {"spec": req.spec,
+                                      "deadline_s": req.deadline_s}
+            self._journal_save()
+
+    def _journal_clear(self, rid: int):
+        if self._journal.pop(rid, None) is not None:
+            self._journal_save()
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, spec, deadline_s: float | None = None) -> int | Response:
+        """Admit one request.  Returns the assigned rid when queued, or a
+        terminal reject :class:`Response` (malformed / oversized /
+        overload).  Every submission consumes one rid, rejected or not, so
+        a storm's rid sequence is reproducible."""
+        rid = self._next_rid
+        self._next_rid += 1
+        raw = spec if isinstance(spec, dict) else None
+        try:
+            study = build_study(spec)
+        except ValueError as e:
+            return self._resolve(Response(rid, _rq.REJECTED_MALFORMED,
+                                          error=str(e)))
+        lanes = study.num_points
+        if lanes > self.cfg.max_lanes:
+            return self._resolve(Response(
+                rid, _rq.REJECTED_OVERSIZED,
+                error=f"request folds to {lanes} lanes > max_lanes="
+                      f"{self.cfg.max_lanes}; split the study"))
+        req = StudyRequest(
+            rid=rid, study=study, spec=raw,
+            deadline_s=deadline_s or self.cfg.default_deadline_s,
+            submitted_at=self.clock.now())
+        if not self.queue.offer(req):
+            return self._resolve(Response(
+                rid, _rq.REJECTED_OVERLOAD,
+                error=f"queue full ({self.queue.maxlen}); load shed"))
+        self._journal_add(req)
+        return rid
+
+    # -- the request loop ---------------------------------------------------
+
+    def step(self) -> Response | None:
+        """Serve the oldest queued request (None when idle or crashed)."""
+        if self.crashed:
+            return None
+        req = self.queue.pop()
+        return None if req is None else self._process(req)
+
+    def drain(self) -> list[Response]:
+        """Serve until the queue is empty (or the worker crashes)."""
+        out = []
+        while (r := self.step()) is not None:
+            out.append(r)
+        return out
+
+    # -- processing: retry -> degrade, under deadline + heartbeat -----------
+
+    def _resolve(self, resp: Response) -> Response:
+        self.responses[resp.rid] = resp
+        self.stats[resp.status] += 1
+        self._journal_clear(resp.rid)
+        return resp
+
+    def _cancel_check(self, req: StudyRequest):
+        """The cancellation point: every dispatch passes through here."""
+        now = self.clock.now()
+        if WORKER in self.hb.dead_hosts(now=now):
+            self.stats["hangs_detected"] += 1
+            self._replace_worker("heartbeat stale (hang)")
+            raise DeadlineExceeded(
+                f"worker heartbeat stale past "
+                f"{self.cfg.heartbeat_timeout_s:.0f}s (hang detected)")
+        if now > req.deadline():
+            raise DeadlineExceeded(
+                f"deadline {req.deadline_s:.1f}s exceeded")
+
+    def _replace_worker(self, why: str):
+        """The restart path for a dead/hung worker: plan the reaction and
+        *forget the host* — without ``remove_host`` the monitor would keep
+        reporting the old incarnation dead and poison every later check."""
+        plan = self.restart_policy.plan([WORKER], devices_per_host=4)
+        self.restart_plans.append({"why": why, **plan})
+        self.hb.remove_host(WORKER)
+
+    def _boundary(self, req: StudyRequest, attempt: int):
+        def boundary(info, thunk):
+            self._cancel_check(req)
+            if self.chaos is not None:
+                self.chaos.on_dispatch(req.rid, attempt, info)
+            self._cancel_check(req)
+            now = self.clock.now()
+            self.hb.beat(WORKER, attempt, now=now)
+            acc = thunk()
+            done = self.clock.now()
+            # Trailing beat: completing a dispatch proves liveness, so a
+            # legitimately slow thunk (a cold XLA compile) is a straggler
+            # observation, never a false hang.
+            self.hb.beat(WORKER, attempt, now=done)
+            self.stragglers.observe(WORKER, max(done - now, 1e-9))
+            return acc
+        return boundary
+
+    def _process(self, req: StudyRequest) -> Response:
+        def finish(status, results=None, engine=None, attempts=0, error=None):
+            return self._resolve(Response(
+                req.rid, status, results=results, engine=engine,
+                attempts=attempts, error=error,
+                latency_s=self.clock.now() - req.submitted_at))
+
+        last_err: Exception | None = None
+        attempt = 0
+        while attempt < self.retry.max_attempts:
+            try:
+                self.hb.beat(WORKER, attempt, now=self.clock.now())
+                # Materialize traces outside the dispatch boundary and
+                # re-arm the heartbeat: synthesis is legitimate work, not a
+                # hang, and on attempt 0 it can take longer than the
+                # heartbeat timeout (its own first-time jit compiles).
+                req.study.traces()
+                self.hb.beat(WORKER, attempt, now=self.clock.now())
+                rs = req.study.run(engine="batch",
+                                   on_dispatch=self._boundary(req, attempt))
+                if self.warm is not None:
+                    self.warm.record(req.study)
+                if attempt:
+                    self.stats["retry_successes"] += 1
+                return finish(_rq.OK, rs, engine="batch",
+                              attempts=attempt + 1)
+            except DeadlineExceeded as e:
+                return finish(_rq.TIMEOUT, attempts=attempt + 1,
+                              error=str(e))
+            except SimulatedCrash as e:
+                return self._crash(req, attempt, e)
+            except Exception as e:  # engine failure: injected or real
+                last_err = e
+                attempt += 1
+                self.stats["engine_failures"] += 1
+                if attempt < self.retry.max_attempts:
+                    self.clock.sleep(self.retry.backoff_s(req.rid, attempt))
+
+        # Batched attempts exhausted: degrade to the sequential reference
+        # engine (bit-exact with the planner on every SimResult field).
+        self.stats["degraded_dispatches"] += 1
+        try:
+            rs = req.study.run(engine="sequential",
+                               on_dispatch=self._boundary(req, attempt))
+            return finish(
+                _rq.OK_DEGRADED, rs, engine="sequential", attempts=attempt,
+                error=f"degraded to sequential after {attempt} batched "
+                      f"failures: {last_err}")
+        except DeadlineExceeded as e:
+            return finish(_rq.TIMEOUT, attempts=attempt, error=str(e))
+        except SimulatedCrash as e:
+            return self._crash(req, attempt, e)
+        except Exception as e:
+            return finish(
+                _rq.FAILED, attempts=attempt,
+                error=f"batched: {last_err}; sequential: {e}")
+
+    def _crash(self, req: StudyRequest, attempt: int, e: Exception) -> Response:
+        """Worker death mid-request: journal entry is kept (NOT cleared) so
+        a restarted server re-answers it; the response is the explicit
+        crash marker, never a silent drop."""
+        self.crashed = True
+        self._replace_worker("worker crash")
+        resp = Response(req.rid, _rq.CRASHED, attempts=attempt + 1,
+                        error=str(e),
+                        latency_s=self.clock.now() - req.submitted_at)
+        self.responses[req.rid] = resp
+        self.stats[_rq.CRASHED] += 1
+        return resp
+
+    # -- crash recovery -----------------------------------------------------
+
+    def recover(self) -> list[Response]:
+        """Re-answer every journaled in-flight request (fresh deadlines).
+        Replayed rids are exempted from chaos injection — a deterministic
+        fault oracle would otherwise kill the same request forever."""
+        out = []
+        for rid in sorted(self._journal):
+            entry = self._journal[rid]
+            if self.chaos is not None:
+                self.chaos.exempt.add(rid)
+            req = StudyRequest(rid=rid, study=build_study(entry["spec"]),
+                               spec=entry["spec"],
+                               deadline_s=entry["deadline_s"],
+                               submitted_at=self.clock.now())
+            resp = self._process(req)
+            resp.restarted = True
+            out.append(resp)
+        return out
+
+
+def restart_server(cfg: ServeConfig, *, clock=None,
+                   chaos: ChaosMonkey | None = None
+                   ) -> tuple[StudyServer, list[Response]]:
+    """Bring up a replacement server after a crash: warm every manifest
+    entry from the persistent compile cache, then re-answer the journaled
+    in-flight requests.  Returns (server, replayed responses)."""
+    server = StudyServer(cfg, clock=clock, chaos=chaos)
+    return server, server.recover()

@@ -1,0 +1,200 @@
+"""Crash-safe warm-compile recovery: persistent XLA cache + warm manifest.
+
+The compile budget is planned and gated (``Study.plan`` == measured
+``sweep_cache_sizes`` deltas), but a fresh process still pays it — 96 s
+cold vs 10.4 s warm for the fig7 fleet.  This module makes the budget a
+*per-machine* cost instead of a per-process one, in two layers:
+
+1. **Persistent XLA compilation cache** — :func:`enable_persistent_cache`
+   points JAX's on-disk compilation cache at the server's cache directory,
+   so any re-trace of a known (geometry, spec, static-flag) scan
+   deserializes the compiled executable instead of re-running XLA.
+
+2. **Warm manifest** — the compiled-scan *key space* is exactly the
+   planner's (mechanism, bucket geometry, lane count, signature spec,
+   static lazy flags) tuples.  :meth:`WarmCache.record` persists every
+   tuple a served study touched to ``warm_manifest.json``;
+   :meth:`WarmCache.warm_from_manifest` replays them on a dummy
+   all-invalid trace of the same geometry, re-populating the in-process
+   jit caches through the *same* ``engine._sweep_fn`` functions every
+   study dispatches through (compiles hit the persistent disk cache, so
+   the replay is cheap).  A restarted server therefore answers previously
+   seen studies with **zero new scan compiles** — measurable with the
+   existing :func:`repro.sim.engine.sweep_cache_sizes` counter and gated
+   exactly like the fig7 compile budget
+   (``benchmarks/check_budget.py`` / ``benchmarks/bench_serve.py``).
+
+The dummy warm trace is all-sentinel (no valid access slots, every window
+invalid), so warming executes each scan once over carry passthroughs —
+same compiled signature as real traffic, near-zero simulated work, and it
+can never pollute any result: warm dispatches produce nothing anyone
+reads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coherence import LazyPIMConfig
+from repro.core.signatures import SignatureSpec, hash_positions
+from repro.sim import engine as _engine
+from repro.sim.costmodel import HWParams
+from repro.sim.prep import CPUWS_REGS, TraceTensors, bucket_shapes, packed_words
+from repro.sim.study import Study
+
+MANIFEST_NAME = "warm_manifest.json"
+
+_GEOMETRY_KEYS = ("num_lines", "num_windows", "num_kernels",
+                  "pim_read_slots", "pim_write_slots",
+                  "cpu_read_slots", "cpu_write_slots")
+
+
+def enable_persistent_cache(cache_dir: str | pathlib.Path) -> bool:
+    """Point JAX's persistent compilation cache at ``cache_dir`` (min-size /
+    min-compile-time thresholds dropped so every scan qualifies).  Returns
+    False — without raising — on JAX versions that lack the flags; the warm
+    manifest still works, the replay just pays real XLA compiles."""
+    cache_dir = pathlib.Path(cache_dir)
+    cache_dir.mkdir(parents=True, exist_ok=True)
+    try:
+        jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+        return True
+    except (AttributeError, ValueError):
+        return False
+
+
+def study_warm_entries(study: Study) -> list[dict]:
+    """The planner tuples a study's batched execution compiles: one entry
+    per (mechanism, geometry bucket) with the stacked lane count and the
+    static compile-key context (signature spec, static lazy flags).  JSON-
+    able — this is the manifest row format."""
+    tts = study.traces()
+    lanes = study._lanes()
+    lazy0 = study.lazy_points()[0]
+    static = {f: getattr(lazy0, f) for f in _engine._LAZY_STATIC_FIELDS}
+    entries = []
+    for idx, shape in bucket_shapes(tts):
+        members = set(idx)
+        n_lanes = sum(1 for lane in lanes if lane[0] in members)
+        if not n_lanes:
+            continue
+        spec = tts[idx[0]].spec
+        for m in study.mechanisms:
+            entries.append({
+                **{k: int(shape[k]) for k in _GEOMETRY_KEYS},
+                "mechanism": m,
+                "lanes": int(n_lanes),
+                "spec": dataclasses.asdict(spec),
+                "lazy_static": dict(static),
+            })
+    return entries
+
+
+def _entry_key(e: dict) -> str:
+    return json.dumps(e, sort_keys=True)
+
+
+def dummy_stacked(entry: dict):
+    """Build the (stacked trace, stacked hw, stacked lazy) triple whose jit
+    key equals the entry's compile key: exact bucket geometry and lane
+    count, all access slots sentinel-empty, every window invalid.  The
+    per-line tables are the real H3 positions those line ids hash to —
+    identical to what ``pad_trace`` would produce — so the static spec
+    metadata matches byte-for-byte."""
+    spec = SignatureSpec(**entry["spec"])
+    n, w, k = entry["num_lines"], entry["num_windows"], entry["num_kernels"]
+    lanes = entry["lanes"]
+
+    def slots(width):
+        return jnp.full((w, width), -1, jnp.int32)
+
+    def valid(width):
+        return jnp.zeros((w, width), jnp.bool_)
+
+    tt = TraceTensors(
+        name="", threads=0,  # pre-neutralized: same key as neutral_trace
+        num_lines=n, num_windows=w, num_kernels=k, spec=spec,
+        line_pos=hash_positions(
+            spec, jnp.arange(n, dtype=jnp.uint32)).astype(jnp.int32),
+        line_reg=jnp.arange(n, dtype=jnp.int32) % CPUWS_REGS,
+        pim_reads=slots(entry["pim_read_slots"]),
+        pim_writes=slots(entry["pim_write_slots"]),
+        cpu_reads=slots(entry["cpu_read_slots"]),
+        cpu_writes=slots(entry["cpu_write_slots"]),
+        pim_r_valid=valid(entry["pim_read_slots"]),
+        pim_w_valid=valid(entry["pim_write_slots"]),
+        cpu_r_valid=valid(entry["cpu_read_slots"]),
+        cpu_w_valid=valid(entry["cpu_write_slots"]),
+        kernel_id=jnp.zeros((w,), jnp.int32),
+        kernel_start=jnp.zeros((w,), jnp.bool_),
+        kernel_end=jnp.zeros((w,), jnp.bool_),
+        pre_writes=jnp.zeros((k, n), jnp.bool_),
+        pre_writes_words=jnp.zeros((k, packed_words(n)), jnp.uint32),
+        pim_instr=jnp.zeros((w,), jnp.float32),
+        cpu_instr=jnp.zeros((w,), jnp.float32),
+        cpu_priv=jnp.zeros((w,), jnp.float32),
+        cpu_priv_miss_rate=jnp.zeros((), jnp.float32),
+        cpu_reuse=jnp.zeros((), jnp.float32),
+        pim_uniq_r=jnp.zeros((w,), jnp.float32),
+        pim_uniq_w=jnp.zeros((w,), jnp.float32),
+        pim_uniq=jnp.zeros((w,), jnp.float32),
+        window_valid=jnp.zeros((w,), jnp.bool_),
+    )
+    stt = _engine.stack_traces([tt] * lanes)
+    shw = _engine.stack_hw([HWParams()] * lanes)
+    scfg = _engine.stack_lazy(
+        [LazyPIMConfig(**entry["lazy_static"])] * lanes)
+    return stt, shw, scfg
+
+
+class WarmCache:
+    """The server's crash-safe warm state: manifest bookkeeping + replay."""
+
+    def __init__(self, cache_dir: str | pathlib.Path):
+        self.dir = pathlib.Path(cache_dir)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.manifest_path = self.dir / MANIFEST_NAME
+        self.persistent = enable_persistent_cache(self.dir)
+
+    def load_manifest(self) -> list[dict]:
+        if not self.manifest_path.exists():
+            return []
+        return json.loads(self.manifest_path.read_text())["entries"]
+
+    def record(self, study: Study) -> int:
+        """Merge a served study's planner tuples into the manifest
+        (idempotent; crash-safe via atomic rename).  Returns the number of
+        new entries."""
+        entries = self.load_manifest()
+        seen = {_entry_key(e) for e in entries}
+        fresh = [e for e in study_warm_entries(study)
+                 if _entry_key(e) not in seen]
+        if fresh:
+            tmp = self.manifest_path.with_suffix(".tmp")
+            tmp.write_text(json.dumps(
+                {"entries": entries + fresh}, indent=2) + "\n")
+            tmp.replace(self.manifest_path)
+        return len(fresh)
+
+    def warm(self, entries: list[dict]) -> int:
+        """Replay manifest entries through the engine's own sweep functions
+        so the in-process jit caches hold every recorded compile key (XLA
+        compiles hit the persistent disk cache when enabled).  Returns the
+        number of dispatches replayed."""
+        for e in entries:
+            stt, shw, scfg = dummy_stacked(e)
+            m = e["mechanism"]
+            fn = _engine._sweep_fn(m)
+            acc = fn(stt, shw, scfg) if m == "lazypim" else fn(stt, shw)
+            jax.block_until_ready(acc)
+        return len(entries)
+
+    def warm_from_manifest(self) -> int:
+        return self.warm(self.load_manifest())

@@ -232,16 +232,31 @@ def _sweep_accs(
     shw: HWParams,
     mechanisms: tuple[str, ...],
     scfg: LazyPIMConfig,
+    boundary=None,
 ) -> dict[str, dict]:
     """Dispatch one stacked execution per mechanism; return host-side
     accumulator dicts with a leading point axis.  THE shared dispatch of
     every batched engine: ``run_sweep`` finalizes its output per point, the
-    ``Study`` planner per (bucket, lane)."""
+    ``Study`` planner per (bucket, lane).
+
+    ``boundary`` is the per-dispatch error/cancellation boundary: a callable
+    ``(mechanism, thunk) -> accs`` invoked once per mechanism with a
+    zero-arg thunk that runs the dispatch *and* materializes its results on
+    the host (so device-side failures surface inside the boundary, not
+    later).  A boundary must return the thunk's result unchanged or raise —
+    it can time out, retry, or abort a dispatch, never alter numbers.  The
+    serve layer (:mod:`repro.serve`) threads deadline checks, heartbeats and
+    fault injection through here.
+    """
     out = {}
     for m in mechanisms:
         fn = _sweep_fn(m)
-        acc = fn(stt, shw, scfg) if m == "lazypim" else fn(stt, shw)
-        out[m] = {k: jax.device_get(v) for k, v in acc.items()}
+
+        def thunk(m=m, fn=fn):
+            acc = fn(stt, shw, scfg) if m == "lazypim" else fn(stt, shw)
+            return {k: jax.device_get(v) for k, v in acc.items()}
+
+        out[m] = thunk() if boundary is None else boundary(m, thunk)
     return out
 
 

@@ -70,8 +70,24 @@ from repro.sim.trace import ALL_APPS, GRAPH_INPUTS, make_trace
 
 __all__ = [
     "Study", "StudyPlan", "StudyPoint", "ResultSet",
-    "Workload", "workload", "HWGrid", "grid",
+    "Workload", "workload", "HWGrid", "grid", "Dispatch",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class Dispatch:
+    """One engine dispatch unit, handed to a ``Study.run(on_dispatch=...)``
+    boundary just before it executes: which compiled scan is about to run
+    (``mechanism``), through which engine, over what shape.  Dispatches are
+    the natural cancellation / error-boundary granularity — the serve layer
+    (:mod:`repro.serve`) checks deadlines, beats heartbeats and injects
+    chaos faults here, one decision per compiled-scan execution."""
+
+    engine: str                      # "batch" | "sequential"
+    mechanism: str
+    lanes: int = 1                   # stacked lanes in this dispatch
+    bucket_lines: int | None = None  # batch only: the bucket's line bound
+    workload: str | None = None      # sequential only: the point's workload
 
 
 # ---------------------------------------------------------------------------
@@ -448,6 +464,13 @@ class Study:
     def lazy_points(self) -> list[LazyPIMConfig]:
         return list(self._lazys)
 
+    @property
+    def num_points(self) -> int:
+        """Total (workload, hw, lazy) points — computable without generating
+        a single trace, so admission control (``repro.serve``) can bound a
+        request's lane count before paying any synthesis or compile cost."""
+        return len(self._lanes())
+
     def _lanes(self) -> list[tuple[int, int, int]]:
         """(workload, hw, lazy) index triples in point order: workload-major,
         then hw, then lazy.  A zipped hw list pins hw index == workload
@@ -484,7 +507,7 @@ class Study:
 
     # -- execution ----------------------------------------------------------
 
-    def run(self, engine: str = "batch") -> ResultSet:
+    def run(self, engine: str = "batch", on_dispatch=None) -> ResultSet:
         """Execute the study.
 
         ``engine="batch"`` (default) runs the planner: bucket, pad, fold
@@ -493,25 +516,44 @@ class Study:
         through the per-trace reference path (``repro.sim.engine.run_all``)
         — bit-exact with the planner on every field, and the differential
         anchor the cross-engine tests compare against.
+
+        ``on_dispatch`` is an optional per-dispatch boundary, called as
+        ``on_dispatch(dispatch_info, thunk)`` once per compiled-scan
+        execution (per (mechanism, bucket) in the batched engine, per
+        (point, mechanism) in the sequential one) with a :class:`Dispatch`
+        describing the unit and a zero-arg thunk that executes it.  The
+        boundary must return the thunk's result unchanged or raise; raising
+        cancels the study at that dispatch.  This is the hook the serve
+        layer uses for deadline cancellation, heartbeats, retry-scoped
+        error capture and fault injection.
         """
         if engine == "batch":
-            return self._run_batched()
+            return self._run_batched(on_dispatch)
         if engine == "sequential":
-            return self._run_sequential()
+            return self._run_sequential(on_dispatch)
         raise ValueError(f"unknown engine {engine!r} "
                          f"(want 'batch' or 'sequential')")
 
-    def _run_sequential(self) -> ResultSet:
+    def _run_sequential(self, on_dispatch=None) -> ResultSet:
         tts, hws, lazys = self.traces(), self.hw_points(), self.lazy_points()
         points = []
         for w, h, li in self._lanes():
-            res = _engine.run_all(tts[w], hws[h], self.mechanisms, lazys[li])
+            res = {}
+            for m in self.mechanisms:
+                def thunk(m=m, w=w, h=h, li=li):
+                    return _engine.run_mechanism(tts[w], hws[h], m, lazys[li])
+                if on_dispatch is None:
+                    res[m] = thunk()
+                else:
+                    res[m] = on_dispatch(
+                        Dispatch(engine="sequential", mechanism=m,
+                                 workload=tts[w].name), thunk)
             points.append(StudyPoint(workload=tts[w].name, hw_index=h,
                                      lazy_index=li, hw=hws[h], lazy=lazys[li],
                                      results=res))
         return ResultSet(points, self.mechanisms)
 
-    def _run_batched(self) -> ResultSet:
+    def _run_batched(self, on_dispatch=None) -> ResultSet:
         tts, hws, lazys = self.traces(), self.hw_points(), self.lazy_points()
         lanes = self._lanes()
         points: list[StudyPoint | None] = [None] * len(lanes)
@@ -525,7 +567,14 @@ class Study:
                 [padded[lanes[j][0]] for j in sel]))
             shw = _engine.stack_hw([hws[lanes[j][1]] for j in sel])
             scfg = _engine.stack_lazy([lazys[lanes[j][2]] for j in sel])
-            accs = _engine._sweep_accs(stacked, shw, self.mechanisms, scfg)
+            boundary = None
+            if on_dispatch is not None:
+                def boundary(m, thunk, _shape=shape, _n=len(sel)):
+                    return on_dispatch(
+                        Dispatch(engine="batch", mechanism=m, lanes=_n,
+                                 bucket_lines=_shape["num_lines"]), thunk)
+            accs = _engine._sweep_accs(stacked, shw, self.mechanisms, scfg,
+                                       boundary=boundary)
             for pos, j in enumerate(sel):
                 w, h, li = lanes[j]
                 res = {m: finalize_result(tts[w].name, m,

@@ -1,0 +1,167 @@
+"""Chaos: seeded fault-injection storms against the resident study server.
+
+Every injected fault class must resolve to exactly one of {reject,
+retry-success, degrade, timeout, clean restart} — never a wrong result,
+never a silent drop.  Storms are bit-reproducible per seed (Threefry
+oracle), so the CI matrix re-runs the same storms on every platform; set
+``REPRO_CHAOS_SEED`` to pin a single seed (the CI fault-injection legs
+do), otherwise all default seeds run."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.serve import (
+    CRASHED,
+    OK,
+    OK_DEGRADED,
+    REJECTED_MALFORMED,
+    REJECTED_OVERSIZED,
+    TIMEOUT,
+    ChaosConfig,
+    ChaosMonkey,
+    ServeConfig,
+    StudyServer,
+    VirtualClock,
+    build_study,
+    make_storm,
+    restart_server,
+)
+
+SMALL = dict(num_kernels=3, windows_per_kernel=2)
+BASE_SPECS = [
+    {"workloads": [{"app": "pagerank", "graph": "arxiv", "scale": 0.4,
+                    **SMALL}],
+     "mechanisms": ["cpu", "lazypim"], "threads": 16},
+    {"workloads": [{"app": "htap128", "scale": 0.004, **SMALL}],
+     "mechanisms": ["cpu", "lazypim"], "threads": 16},
+]
+
+SEEDS = ([int(os.environ["REPRO_CHAOS_SEED"])]
+         if "REPRO_CHAOS_SEED" in os.environ else [0, 1, 2])
+
+
+def _reference_rows(rid):
+    """Fault-free sequential-engine answer for the storm's rid-th request."""
+    return build_study(BASE_SPECS[rid % len(BASE_SPECS)]) \
+        .run("sequential").to_rows()
+
+
+def _assert_right_answer(resp):
+    """A served response (degraded or not, replayed or not) must be
+    bit-exact with the fault-free sequential reference."""
+    got = resp.results.to_rows()
+    want = _reference_rows(resp.rid)
+    assert len(got) == len(want)
+    for x, y in zip(got, want):
+        for k in x:
+            if isinstance(x[k], float):
+                np.testing.assert_array_equal(x[k], y[k])
+            else:
+                assert x[k] == y[k]
+
+
+def _run_storm(seed, classes, n=16, fault_rate=0.6):
+    clock = VirtualClock()
+    monkey = ChaosMonkey(
+        ChaosConfig(seed=seed, fault_rate=fault_rate, classes=classes,
+                    hang_s=60.0),
+        clock=clock)
+    # Deadlines are effectively infinite so one request's 60s hang doesn't
+    # eat the deadline budget of everything queued behind it (the hang
+    # itself is caught by the heartbeat monitor, not the deadline; deadline
+    # expiry has its own test in test_serve.py).
+    cfg = ServeConfig(default_deadline_s=1e9, heartbeat_timeout_s=20.0,
+                      backoff_base_s=0.01, max_queue=n, max_lanes=64)
+    srv = StudyServer(cfg, clock=clock, chaos=monkey)
+    for spec in make_storm(monkey, n, BASE_SPECS):
+        srv.submit(spec)
+    srv.drain()
+    return srv, monkey, clock
+
+
+EXPECT = {
+    None: OK,
+    "malformed_spec": REJECTED_MALFORMED,
+    "oversized": REJECTED_OVERSIZED,
+    "hang": TIMEOUT,
+}
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_every_fault_class_resolves_as_required(seed):
+    classes = ("malformed_spec", "oversized", "engine_exception", "hang")
+    srv, monkey, _ = _run_storm(seed, classes)
+    assert len(srv.responses) == 16  # one terminal response per request
+    for rid, resp in srv.responses.items():
+        kind = monkey.fault_for(rid)
+        if kind == "engine_exception":
+            if monkey.is_transient(rid):
+                assert resp.status == OK and resp.attempts == 2, rid
+            else:
+                assert resp.status == OK_DEGRADED, rid
+                assert resp.engine == "sequential"
+        else:
+            assert resp.status == EXPECT[kind], (rid, kind)
+        if resp.served:
+            _assert_right_answer(resp)  # zero wrong results, ever
+    # The storm actually exercised multiple fault classes at this seed.
+    hit = {monkey.fault_for(r) for r in range(16)} - {None}
+    assert len(hit) >= 3, f"seed {seed} storm too quiet: {hit}"
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_storm_is_bit_reproducible(seed):
+    classes = ("malformed_spec", "oversized", "engine_exception", "hang")
+    a, _, ca = _run_storm(seed, classes)
+    b, _, cb = _run_storm(seed, classes)
+    assert {r: v.status for r, v in a.responses.items()} == \
+        {r: v.status for r, v in b.responses.items()}
+    assert {r: v.attempts for r, v in a.responses.items()} == \
+        {r: v.attempts for r, v in b.responses.items()}
+    assert ca.slept == cb.slept  # identical backoff + hang timeline
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_crash_storm_recovers_with_no_silent_drops(seed, tmp_path):
+    n = 12
+    clock = VirtualClock()
+    monkey = ChaosMonkey(
+        ChaosConfig(seed=seed, fault_rate=0.6, hang_s=60.0), clock=clock)
+    cfg = ServeConfig(default_deadline_s=1e9, heartbeat_timeout_s=20.0,
+                      backoff_base_s=0.01, max_queue=n, max_lanes=64,
+                      cache_dir=str(tmp_path / f"seed{seed}"))
+    srv = StudyServer(cfg, clock=clock, chaos=monkey)
+    final = {}
+    for spec in make_storm(monkey, n, BASE_SPECS):
+        out = srv.submit(spec)
+        if not isinstance(out, int):
+            final[out.rid] = out  # admission reject is already terminal
+    for r in srv.drain():
+        final[r.rid] = r
+
+    restarts = 0
+    while srv.crashed:
+        restarts += 1
+        assert restarts <= n, "restart loop did not converge"
+        srv, replayed = restart_server(cfg, clock=clock, chaos=monkey)
+        for r in replayed:
+            assert r.restarted
+            final[r.rid] = r
+        for r in srv.drain():
+            final[r.rid] = r
+
+    # Exactly one terminal, non-crashed response per request — a crash is
+    # never an answer, only a handoff to the restarted server.
+    assert sorted(final) == list(range(n))
+    assert all(r.status != CRASHED for r in final.values())
+    crashed_rids = [rid for rid in range(n)
+                    if monkey.fault_for(rid) == "crash"]
+    if crashed_rids:
+        assert restarts >= 1
+        for rid in crashed_rids:
+            assert final[rid].status == OK and final[rid].restarted, rid
+    for r in final.values():
+        if r.served:
+            _assert_right_answer(r)

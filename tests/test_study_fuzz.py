@@ -1,0 +1,114 @@
+"""Fuzz: malformed study specs always fail with a naming ValueError and
+never reach the engine (no trace synthesis, no sweep dispatch).
+
+Property-based when hypothesis is installed; the seeded fallback shim
+otherwise.  The corruption menu mirrors ``ChaosMonkey.corrupt_spec`` plus
+the structural mutations a wire client could produce (wrong types, unknown
+keys, missing fields) — every one of them must be stopped at admission by
+``build_study``'s / the Study constructor's own validation."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _fallback_hypothesis import given, settings, st
+
+from repro.serve.request import build_study
+from repro.sim import engine as _engine
+
+GOOD = {
+    "workloads": ["pagerank-arxiv",
+                  {"app": "htap128", "scale": 0.004, "num_kernels": 3}],
+    "mechanisms": ["cpu", "cg", "lazypim"],
+    "threads": 16,
+    "hw_grid": {"offchip_bw_gbs": [16.0, 32.0]},
+}
+
+
+def _corrupt(spec: dict, which: int, salt: int) -> object:
+    """Deterministic malformed-spec menu; ``salt`` varies the payload."""
+    bad = {k: (list(v) if isinstance(v, list) else
+               dict(v) if isinstance(v, dict) else v)
+           for k, v in spec.items()}
+    which %= 12
+    if which == 0:      # unknown workload name
+        bad["workloads"].append(f"bogus-app-{salt}")
+    elif which == 1:    # unknown mechanism
+        bad["mechanisms"].append(f"warp{salt}")
+    elif which == 2:    # workload dict without 'app'
+        bad["workloads"].append({"graph": "arxiv"})
+    elif which == 3:    # non-string app
+        bad["workloads"].append({"app": salt})
+    elif which == 4:    # non-JSON-able per-entry signature spec
+        bad["workloads"].append({"app": "htap128", "spec": {"sig_bits": 64}})
+    elif which == 5:    # wrong-typed threads
+        bad["threads"] = "sixteen"
+    elif which == 6:    # unknown top-level key
+        bad[f"shards_{salt}"] = 4
+    elif which == 7:    # no workloads at all
+        del bad["workloads"]
+    elif which == 8:    # empty workload axis
+        bad["workloads"] = []
+    elif which == 9:    # unknown HWParams field in the grid
+        bad["hw_grid"] = {f"warp_speed_{salt}": [1, 2]}
+    elif which == 10:   # empty hw grid
+        bad["hw_grid"] = {}
+    else:               # spec is not a dict at all
+        return salt
+    return bad
+
+
+@pytest.fixture
+def engine_tripwire(monkeypatch):
+    """Any dispatch or trace synthesis during admission is a test failure."""
+    def boom(*a, **k):
+        raise AssertionError("malformed spec reached the engine")
+    monkeypatch.setattr(_engine, "_sweep_accs", boom)
+    monkeypatch.setattr(_engine, "run_mechanism", boom)
+    monkeypatch.setattr(_engine, "run_all", boom)
+    monkeypatch.setattr("repro.sim.study.make_trace", boom)
+
+
+def test_malformed_specs_raise_naming_value_error(engine_tripwire):
+    @settings(max_examples=60)
+    @given(st.integers(min_value=0, max_value=2**31 - 1),
+           st.integers(min_value=0, max_value=999))
+    def prop(which, salt):
+        bad = _corrupt(GOOD, which, salt)
+        with pytest.raises(ValueError) as exc:
+            build_study(bad)
+        # The error must *name* the offense, not just refuse: a client can
+        # act on it without reading server code.
+        assert len(str(exc.value)) > 10
+
+    prop()
+
+
+def test_every_menu_entry_is_actually_malformed(engine_tripwire):
+    for which in range(12):
+        with pytest.raises(ValueError):
+            build_study(_corrupt(GOOD, which, salt=7))
+
+
+def test_good_spec_builds_without_touching_engine(engine_tripwire):
+    study = build_study(GOOD)
+    # Admission-side planning (lane count) must also stay synthesis-free.
+    assert study.num_points == 2 * 2 * 1
+
+
+def test_chaos_admission_corruptions_are_rejected(engine_tripwire):
+    """The chaos monkey's own admission-class corruptions trip the same
+    validation wall (malformed -> ValueError; oversized -> lane bound)."""
+    from repro.serve.chaos import ChaosConfig, ChaosMonkey
+
+    monkey = ChaosMonkey(ChaosConfig(seed=11, fault_rate=1.0,
+                                     classes=("malformed_spec",)))
+    for rid in range(20):
+        with pytest.raises(ValueError):
+            build_study(monkey.corrupt_spec(rid, GOOD))
+
+    monkey = ChaosMonkey(ChaosConfig(seed=11, fault_rate=1.0,
+                                     classes=("oversized",)))
+    study = build_study(monkey.corrupt_spec(0, GOOD))
+    assert study.num_points > 4096  # admission bound catches it pre-synthesis

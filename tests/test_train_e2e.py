@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import argparse
 
+import numpy as np
 
 
 def _args(tmp_path, **kw):
@@ -22,11 +23,29 @@ def test_train_reduces_loss(tmp_path):
 
 
 def test_train_failure_restart(tmp_path):
-    """Injected failure at step 16 -> restart restores step 16's checkpoint
-    and finishes; loss still improves end-to-end."""
+    """Injected failure at step 16 -> restart restores step 8's checkpoint
+    and finishes all 24 steps.
+
+    Restart *correctness* is the restarted run reproducing the clean run's
+    trajectory from the restore point (checkpointing is step-atomic and the
+    data pipeline counter-based, so the post-restore segment sees identical
+    state and batches) — asserted as a tolerance band on the loss curve, not
+    exact equality, so jit re-compilation noise and backend fused-math
+    differences can't flake it.  The old ``last_loss < first_loss`` check
+    compared a mid-training restored loss against the noisy tail and was
+    seed-unstable on slow/odd backends."""
     from repro.launch.train import run
+    clean = run(_args(tmp_path / "clean", steps=24))
     out = run(_args(tmp_path / "b", fail_at=16, steps=24))
-    assert out["last_loss"] < out["first_loss"]
+    # restarted from the last checkpoint before the failure (8, not 16:
+    # step 16 fails before its own checkpoint is written)
+    assert out["restored_step"] == 8
+    assert clean["restored_step"] is None
+    # the restarted segment covers steps 8..23 and tracks the clean run's
+    # trajectory within a tolerance band
+    assert len(out["losses"]) == 24 - 8
+    np.testing.assert_allclose(out["losses"], clean["losses"][8:],
+                               rtol=0.05, atol=0.05)
 
 
 def test_serve_completes_requests():
