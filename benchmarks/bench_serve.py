@@ -16,6 +16,14 @@ Two legs, one ``BENCH_serve.json`` record:
   Records cold/warm timings and the measured post-restart scan-compile
   count, which must be **zero** (gated by ``benchmarks.check_budget``
   against the committed record, like the fleet compile budget).
+* **coalesce** — a queue of 16 interactive-sized repeat studies, served
+  one-at-a-time (the PR-6 loop) vs coalesced into blessed-width shared
+  dispatches (``ServeConfig(coalesce=True)``).  Both legs measure the
+  *warm* steady state (compile keys hot, resident studies cached);
+  reports studies/sec for each, the speedup (gated >= 2x), the one-time
+  blessed-width compile count, and the steady-state scan-compile delta,
+  which must be **zero** — blessed widths are the proof coalescing
+  cannot explode the compile-key space.
 """
 
 from __future__ import annotations
@@ -111,6 +119,65 @@ def bench_storm() -> dict:
     }
 
 
+COALESCE_N = 16  # queue depth per measured pass (8 per geometry group)
+REPEATS = 3      # steady-state passes; best-of wins (single-core jitter)
+
+# Interactive-sized requests: the load shape coalescing targets — many
+# small repeat studies queued behind one resident worker, where the
+# per-dispatch overhead (not the scan) dominates the one-at-a-time loop.
+COALESCE_SPECS = [
+    {"workloads": [{"app": "pagerank", "graph": "arxiv", "scale": 0.01,
+                    **_SMALL}],
+     "mechanisms": ["cpu", "cg", "lazypim"], "threads": 16},
+    {"workloads": [{"app": "htap128", "scale": 0.0001, **_SMALL}],
+     "mechanisms": ["cpu", "cg", "lazypim"], "threads": 16},
+]
+
+
+def bench_coalesce() -> dict:
+    specs = [COALESCE_SPECS[i % len(COALESCE_SPECS)]
+             for i in range(COALESCE_N)]
+
+    def run_pass(srv):
+        rids = [srv.submit(s) for s in specs]
+        assert all(isinstance(r, int) for r in rids), "admission rejected"
+        t0 = time.perf_counter()
+        out = srv.drain()
+        wall = time.perf_counter() - t0
+        assert len(out) == COALESCE_N
+        assert all(r.status == "ok" for r in out), \
+            {r.rid: r.status for r in out if r.status != "ok"}
+        return wall
+
+    solo = StudyServer(ServeConfig(default_deadline_s=3600.0,
+                                   max_queue=COALESCE_N))
+    run_pass(solo)  # warm the 1-lane compile keys + resident studies
+    solo_s = min(run_pass(solo) for _ in range(REPEATS))
+
+    co = StudyServer(ServeConfig(default_deadline_s=3600.0,
+                                 max_queue=COALESCE_N, coalesce=True,
+                                 audit_fraction=0.0))
+    base = dict(_engine.sweep_cache_sizes())
+    run_pass(co)  # warm the blessed-width compile keys (one-time cost)
+    warmed = dict(_engine.sweep_cache_sizes())
+    blessed_compiles = sum(warmed.values()) - sum(base.values())
+    co_s = min(run_pass(co) for _ in range(REPEATS))
+    after = dict(_engine.sweep_cache_sizes())
+    new_compiles = sum(after.values()) - sum(warmed.values())
+    assert new_compiles == 0, \
+        f"steady-state coalescing recompiled {new_compiles} scans"
+    groups_per_pass = int(co.stats["coalesced_groups"]) // (1 + REPEATS)
+    return {
+        "queue_depth": COALESCE_N,
+        "one_at_a_time_studies_per_s": round(COALESCE_N / solo_s, 3),
+        "coalesced_studies_per_s": round(COALESCE_N / co_s, 3),
+        "speedup": round(solo_s / co_s, 3),
+        "coalesced_dispatch_groups": groups_per_pass,
+        "blessed_width_compiles": int(blessed_compiles),
+        "new_scan_compiles_at_steady_state": int(new_compiles),
+    }
+
+
 def bench_warm_restart() -> dict:
     from benchmarks.fig7_speedup import study as fig7_study
 
@@ -161,7 +228,15 @@ def main() -> None:
           f"cold {warm['cold_serve_s']}s -> boot {warm['warm_boot_s']}s + "
           f"serve {warm['warm_serve_s']}s, "
           f"{warm['new_scan_compiles_after_restart']} new scan compiles")
-    path = write_bench_json("serve", {"storm": storm, "warm_restart": warm})
+    coalesce = bench_coalesce()
+    print(f"coalesce: depth {coalesce['queue_depth']}, "
+          f"{coalesce['one_at_a_time_studies_per_s']:.1f} -> "
+          f"{coalesce['coalesced_studies_per_s']:.1f} studies/s "
+          f"({coalesce['speedup']:.2f}x), "
+          f"{coalesce['blessed_width_compiles']} blessed-width compiles, "
+          f"{coalesce['new_scan_compiles_at_steady_state']} at steady state")
+    path = write_bench_json("serve", {"storm": storm, "warm_restart": warm,
+                                      "coalesce": coalesce})
     print(f"wrote {path}")
 
 

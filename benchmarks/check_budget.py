@@ -23,7 +23,9 @@ small study).
 
 The committed ``BENCH_serve.json`` is gated alongside it: a post-crash warm
 restart of the serve layer must show zero new scan compiles
-(:func:`check_serve`).
+(:func:`check_serve`), and the cross-request coalescing leg must show
+>= 2x studies/sec at queue depth >= 8 with zero steady-state scan compiles
+beyond the blessed-width budget (:func:`check_coalesce`).
 
 Usage: python -m benchmarks.check_budget [--live] [path-to-BENCH_engine.json]
 """
@@ -97,6 +99,47 @@ def check_serve(path: pathlib.Path) -> int:
     if entries > FLEET_COMPILE_BUDGET:
         print(f"check_budget: warm manifest holds {entries} entries > "
               f"fleet budget {FLEET_COMPILE_BUDGET}", file=sys.stderr)
+        return 1
+    return check_coalesce(record, path)
+
+
+def check_coalesce(record: dict, path: pathlib.Path) -> int:
+    """Gate the coalescing leg of the serve record: at queue depth >= 8,
+    blessed-width coalescing must deliver >= 2x studies/sec over the
+    one-at-a-time loop AND add zero scan compiles at steady state beyond
+    the one-time blessed-width budget — coalescing that pays for itself in
+    compiles (one fresh jit key per queue occupancy) is exactly the
+    regression blessed widths exist to prevent."""
+    co = record.get("coalesce")
+    if not co:
+        print(f"check_budget: no coalesce section in {path} — regenerate "
+              f"with `python -m benchmarks.run --bench serve`",
+              file=sys.stderr)
+        return 1
+    depth = co["queue_depth"]
+    speedup = co["speedup"]
+    steady = co["new_scan_compiles_at_steady_state"]
+    blessed = co["blessed_width_compiles"]
+    print(f"check_budget: serve coalesce: depth {depth}, "
+          f"{co['one_at_a_time_studies_per_s']} -> "
+          f"{co['coalesced_studies_per_s']} studies/s ({speedup}x), "
+          f"{blessed} blessed-width compiles, {steady} at steady state "
+          f"(budget: depth >= 8, >= 2.0x, 0 steady-state compiles)")
+    if depth < 8:
+        print(f"check_budget: coalesce leg ran at queue depth {depth} < 8 "
+              f"— not the claimed load shape", file=sys.stderr)
+        return 1
+    if speedup < 2.0:
+        print(f"check_budget: coalescing speedup {speedup}x < 2.0x — "
+              f"shared-batch dispatch regressed", file=sys.stderr)
+        return 1
+    if steady != 0:
+        print(f"check_budget: coalesced steady state COMPILED {steady} new "
+              f"scans — blessed-width keying is broken", file=sys.stderr)
+        return 1
+    if blessed > FLEET_COMPILE_BUDGET:
+        print(f"check_budget: blessed-width warm-up cost {blessed} compiles "
+              f"> fleet budget {FLEET_COMPILE_BUDGET}", file=sys.stderr)
         return 1
     return 0
 

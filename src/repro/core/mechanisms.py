@@ -30,6 +30,7 @@ coherence-event counters the benchmarks report.  LazyPIM itself lives in
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +47,7 @@ from repro.sim.prep import (
 
 __all__ = [
     "SimResult",
+    "ResultIntegrityError",
     "finalize_result",
     "simulate_cpu_only",
     "simulate_ideal",
@@ -165,16 +167,33 @@ def _bw_bound_ns(hw: HWParams, offchip_bytes):
     return offchip_bytes / hw.offchip_bw_gbs
 
 
+class ResultIntegrityError(ValueError):
+    """A finalized accumulator failed the per-result integrity sentinel:
+    a NaN/Inf crept into a metric, or a physically non-negative quantity
+    (cycles, bytes, event counts — every ``SimResult`` field) came back
+    negative.  Legitimate simulations can never produce these (every
+    accumulator is a sum of non-negative float32 terms), so tripping the
+    sentinel means the *execution* was corrupted — the serve layer treats
+    it as a poisoned lane and quarantines the owning request rather than
+    returning a wrong-but-plausible number."""
+
+
 def finalize_result(name: str, mechanism: str, acc: dict) -> SimResult:
     """THE accumulator→``SimResult`` constructor: every engine (sequential
     simulators, ``run_sweep``, the batch/study planner) funnels its raw
     accumulator dict through here, so result construction cannot drift
-    between engines (the bit-exact cross-engine tests pin it)."""
-    return SimResult(
-        name=name,
-        mechanism=mechanism,
-        **{k: float(v) for k, v in acc.items()},
-    )
+    between engines (the bit-exact cross-engine tests pin it).  Every
+    value passes the NaN/Inf/negative integrity sentinel
+    (:class:`ResultIntegrityError`) — per lane, since batched engines
+    finalize one lane at a time."""
+    vals = {k: float(v) for k, v in acc.items()}
+    for k, v in vals.items():
+        if not math.isfinite(v) or v < 0.0:
+            raise ResultIntegrityError(
+                f"integrity sentinel: {name or '<unnamed>'}/{mechanism} "
+                f"{k}={v!r} (NaN/Inf/negative — corrupted execution, not a "
+                f"valid simulation result)")
+    return SimResult(name=name, mechanism=mechanism, **vals)
 
 
 def _finalize(tt: TraceTensors, mech: str, acc: dict) -> SimResult:

@@ -139,7 +139,7 @@ def serve_study(args) -> list:
         specs = [specs]
     cfg = ServeConfig(default_deadline_s=args.deadline_s,
                       max_queue=args.max_queue, cache_dir=args.cache_dir,
-                      seed=args.seed)
+                      seed=args.seed, coalesce=args.coalesce)
     chaos = None
     if args.chaos_rate > 0:
         chaos = ChaosMonkey(ChaosConfig(seed=args.seed,
@@ -190,6 +190,10 @@ def main():
     ap.add_argument("--max-queue", type=int, default=64)
     ap.add_argument("--chaos-rate", type=float, default=0.0,
                     help="inject this fraction of chaos faults (testing)")
+    ap.add_argument("--coalesce", action="store_true",
+                    help="coalesce compatible queued studies into shared "
+                         "blessed-width batched dispatches (bit-exact; "
+                         "poison requests are bisected out and quarantined)")
     args = ap.parse_args()
     if args.study:
         serve_study(args)

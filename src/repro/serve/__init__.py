@@ -3,11 +3,15 @@
 A long-lived server wrapping the Study planner in a hardened request
 loop: bounded-queue admission with load shedding, per-request deadlines,
 retry with deterministic backoff, graceful degradation to the sequential
-reference engine, and crash-safe warm-compile recovery.  The deterministic
+reference engine, crash-safe warm-compile recovery, and fault-isolated
+cross-request lane coalescing (:mod:`repro.serve.coalesce`) with
+bisection rollback and per-lane result integrity.  The deterministic
 fault-injection harness lives in :mod:`repro.serve.chaos`.
 """
 
 from repro.serve.chaos import (
+    ALL_FAULT_CLASSES,
+    COALESCE_FAULT_CLASSES,
     FAULT_CLASSES,
     ChaosConfig,
     ChaosMonkey,
@@ -16,12 +20,23 @@ from repro.serve.chaos import (
     make_storm,
 )
 from repro.serve.clock import VirtualClock, WallClock
+from repro.serve.coalesce import (
+    BLESSED_LANE_WIDTHS,
+    GroupKey,
+    LaneSlice,
+    audit_sample,
+    blessed_width,
+    group_key,
+    group_warm_entries,
+    stack_group,
+)
 from repro.serve.queueing import BoundedQueue
 from repro.serve.request import (
     CRASHED,
     FAILED,
     OK,
     OK_DEGRADED,
+    QUARANTINED,
     REJECTED,
     REJECTED_MALFORMED,
     REJECTED_OVERLOAD,
@@ -41,9 +56,15 @@ from repro.serve.server import (
     StudyServer,
     restart_server,
 )
-from repro.serve.warm import WarmCache, enable_persistent_cache
+from repro.serve.warm import (
+    ManifestCorruptError,
+    WarmCache,
+    enable_persistent_cache,
+)
 
 __all__ = [
+    "ALL_FAULT_CLASSES",
+    "COALESCE_FAULT_CLASSES",
     "FAULT_CLASSES",
     "ChaosConfig",
     "ChaosMonkey",
@@ -52,11 +73,20 @@ __all__ = [
     "make_storm",
     "VirtualClock",
     "WallClock",
+    "BLESSED_LANE_WIDTHS",
+    "GroupKey",
+    "LaneSlice",
+    "audit_sample",
+    "blessed_width",
+    "group_key",
+    "group_warm_entries",
+    "stack_group",
     "BoundedQueue",
     "CRASHED",
     "FAILED",
     "OK",
     "OK_DEGRADED",
+    "QUARANTINED",
     "REJECTED",
     "REJECTED_MALFORMED",
     "REJECTED_OVERLOAD",
@@ -73,6 +103,7 @@ __all__ = [
     "ServeConfig",
     "StudyServer",
     "restart_server",
+    "ManifestCorruptError",
     "WarmCache",
     "enable_persistent_cache",
 ]

@@ -24,6 +24,24 @@ Fault classes (``FAULT_CLASSES``) and their required resolutions:
                            journaled request is re-answered by a restarted
                            server from the warm compile cache.
 
+Coalescing-era classes (``COALESCE_FAULT_CLASSES``, opt-in — not in the
+default draw so legacy storm replays stay bit-identical):
+
+* ``poison_lane``        → every coalesced dispatch containing the request
+                           raises; the server bisects the batch, answers
+                           the healthy halves, and quarantines the
+                           offender with its bisection trace;
+* ``poison_result``      → the request's lane slice of the raw
+                           accumulators is corrupted post-dispatch.  The
+                           NaN variant trips the per-lane integrity
+                           sentinel in ``finalize_result`` (lane-exact
+                           attribution → quarantine); the finite variant
+                           survives the sentinel and is caught by the
+                           seeded sequential spot-check audit, which
+                           degrades the whole batch to the sequential
+                           reference (every member ``ok_degraded``,
+                           bit-exact).
+
 The harness never fabricates results: an injected fault can only ever
 surface as a typed exception (or a corrupted *spec*, for the two admission
 classes), so a wrong-but-plausible answer is impossible by construction —
@@ -41,6 +59,11 @@ from repro.sim.synth import threefry2x32
 
 FAULT_CLASSES = ("malformed_spec", "oversized", "engine_exception",
                  "hang", "crash")
+# Coalescing-path classes are opt-in: appending them to FAULT_CLASSES
+# would shift the Threefry class draw and silently rewrite every
+# committed legacy storm, so the default draw set stays frozen.
+COALESCE_FAULT_CLASSES = ("poison_lane", "poison_result")
+ALL_FAULT_CLASSES = FAULT_CLASSES + COALESCE_FAULT_CLASSES
 
 # Draw-salt lanes: one per decision the monkey makes about a request.
 _SALT_FAULTED = np.uint32(1)
@@ -70,10 +93,10 @@ class ChaosConfig:
     hang_s: float = 60.0
 
     def __post_init__(self):
-        unknown = set(self.classes) - set(FAULT_CLASSES)
+        unknown = set(self.classes) - set(ALL_FAULT_CLASSES)
         if unknown:
             raise ValueError(f"unknown fault classes {sorted(unknown)} "
-                             f"(know {FAULT_CLASSES})")
+                             f"(know {ALL_FAULT_CLASSES})")
 
 
 class ChaosMonkey:
@@ -176,6 +199,47 @@ class ChaosMonkey:
             if attempt == 0:
                 self.injected.append((rid, "crash"))
                 raise SimulatedCrash(f"chaos: worker died (rid={rid})")
+
+    # -- coalescing-class injection (shared-batch dispatch boundary) --------
+
+    def on_coalesced_dispatch(self, rids: list[int], info) -> None:
+        """Called inside the coalesced dispatch boundary before the engine
+        thunk runs, with every member rid of the shared batch.  A
+        ``poison_lane`` member fails the *whole* dispatch — that is the
+        point: the fault is only isolatable by bisection, never by
+        per-request attribution."""
+        for rid in rids:
+            if self.fault_for(rid) == "poison_lane":
+                self.injected.append((rid, "poison_lane"))
+                raise InjectedEngineError(
+                    f"chaos: poison lane (rid={rid}) sank a coalesced "
+                    f"dispatch of {len(rids)} request(s)")
+
+    def corrupt_accs(self, lane_slices: list[tuple[int, slice]],
+                     accs: dict) -> dict:
+        """Apply ``poison_result`` corruption to the raw per-lane
+        accumulators of a *successful* coalesced dispatch.  ``lane_slices``
+        maps each member rid to its lane range in the stacked axis;
+        ``accs`` is ``{mechanism: {field: array[lanes, ...]}}``.  Variant 0
+        writes NaN (integrity sentinel catches it at finalize); variant 1
+        scales ``time_ns`` by a finite factor (only the sequential audit
+        can catch it)."""
+        poisoned = [(rid, sl) for rid, sl in lane_slices
+                    if self.fault_for(rid) == "poison_result"]
+        if not poisoned:
+            return accs
+        accs = {m: {k: np.array(v) for k, v in fields.items()}
+                for m, fields in accs.items()}
+        for rid, sl in poisoned:
+            v = self.variant(rid, 2)
+            self.injected.append(
+                (rid, f"poison_result:{'nan' if v == 0 else 'finite'}"))
+            for fields in accs.values():
+                if v == 0:
+                    fields["time_ns"][sl] = np.nan
+                else:
+                    fields["time_ns"][sl] = fields["time_ns"][sl] * 1.5
+        return accs
 
 
 def make_storm(monkey: ChaosMonkey, n_requests: int,

@@ -38,3 +38,15 @@ class BoundedQueue:
     def pop(self):
         """Oldest admitted item, or None when idle."""
         return self._q.popleft() if self._q else None
+
+    def take(self, pred) -> list:
+        """Remove and return every queued item matching ``pred``, oldest
+        first (relative order preserved; non-matching items keep their
+        positions).  The coalescer's group-formation primitive: pop the
+        head, then ``take`` its compatible peers — a stateful predicate
+        can stop matching once the group's lane budget fills."""
+        taken, kept = [], []
+        for item in self._q:
+            (taken if pred(item) else kept).append(item)
+        self._q = deque(kept)
+        return taken

@@ -36,11 +36,12 @@ REJECTED_OVERLOAD = "rejected_overload"    # queue full; load shed
 TIMEOUT = "timeout"                        # deadline passed / hang detected
 CRASHED = "crashed"                        # worker crash; journaled for restart
 FAILED = "failed"                          # retries + degradation exhausted
+QUARANTINED = "quarantined"                # isolated as a coalescing poison
 
 SERVED = frozenset({OK, OK_DEGRADED})
 REJECTED = frozenset({REJECTED_MALFORMED, REJECTED_OVERSIZED,
                       REJECTED_OVERLOAD})
-TERMINAL = SERVED | REJECTED | frozenset({TIMEOUT, FAILED})
+TERMINAL = SERVED | REJECTED | frozenset({TIMEOUT, FAILED, QUARANTINED})
 
 
 @dataclasses.dataclass

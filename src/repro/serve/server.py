@@ -25,6 +25,15 @@ replay a whole storm bit-for-bit.  The hardening layers, in request order:
   request falls back to the sequential reference engine, which computes
   the *same numbers bit-for-bit* (the PR-4 cross-engine harness), so a
   degraded answer is never a wrong answer.
+* **Fault-isolated coalescing** (``cfg.coalesce``) — compatible queued
+  requests share ONE blessed-width batched dispatch
+  (:mod:`repro.serve.coalesce`) and split results by lane slice.  A
+  dispatch that fails, hangs, or trips the per-lane integrity sentinel is
+  *bisected*: healthy halves answer from their own successful
+  sub-dispatches, the poison request is quarantined with its bisection
+  trace (:attr:`StudyServer.quarantine`) instead of retried forever, and
+  a sequential spot-check audit on a seeded Threefry lane sample degrades
+  a finitely-corrupted batch to the bit-exact sequential reference.
 * **Crash-safe warm restart** — admitted JSON requests are journaled;
   served studies' planner tuples are recorded in the warm manifest
   (:mod:`repro.serve.warm`).  After a crash, :func:`restart_server`
@@ -39,6 +48,7 @@ import dataclasses
 import json
 from collections import Counter
 
+from repro.core.mechanisms import ResultIntegrityError
 from repro.runtime.fault_tolerance import (
     HeartbeatMonitor,
     RestartPolicy,
@@ -47,10 +57,19 @@ from repro.runtime.fault_tolerance import (
 from repro.serve import request as _rq
 from repro.serve.chaos import ChaosMonkey, SimulatedCrash
 from repro.serve.clock import WallClock
+from repro.serve.coalesce import (
+    BLESSED_LANE_WIDTHS,
+    audit_sample,
+    group_key,
+    group_warm_entries,
+    stack_group,
+)
 from repro.serve.queueing import BoundedQueue
 from repro.serve.request import Response, StudyRequest, build_study
 from repro.serve.retry import RetryPolicy
 from repro.serve.warm import WarmCache
+from repro.sim import engine as _engine
+from repro.sim.study import Dispatch
 
 WORKER = 0  # host id of the single in-process worker in the monitors
 JOURNAL_NAME = "journal.json"
@@ -71,7 +90,16 @@ class ServeConfig:
     heartbeat_timeout_s: float = 30.0
     cache_dir: str | None = None    # persistent compile cache + journal
     warm_on_start: bool = True      # replay the warm manifest at boot
-    seed: int = 0                   # retry-jitter stream
+    seed: int = 0                   # retry-jitter + audit-sample stream
+    # Cross-request lane coalescing (repro.serve.coalesce).  Off by
+    # default: the one-at-a-time loop is the PR-6 behavior the legacy
+    # chaos storms replay bit-for-bit, and the bit-exactness tests compare
+    # a coalescing server against it.
+    coalesce: bool = False
+    max_batch_lanes: int = 64       # group lane budget (<= largest blessed)
+    audit_fraction: float = 0.25    # lane fraction spot-checked sequentially
+    study_cache: int = 32           # resident Studies reused for repeat
+    #                                 specs (skips re-synthesis); 0 disables
 
 
 class StudyServer:
@@ -97,8 +125,12 @@ class StudyServer:
         self.responses: dict[int, Response] = {}
         self.stats = Counter()
         self.restart_plans: list[dict] = []
+        self.quarantine: dict[int, dict] = {}  # rid -> diagnostic record
         self._next_rid = 0
         self._journal: dict[int, dict] = {}
+        self._service_ema = 0.0  # per-request service-time estimate (s)
+        self._group_tag = 0      # coalesced-dispatch counter (audit stream)
+        self._study_cache: dict[str, object] = {}  # spec json -> Study (LRU)
         if self.warm:
             self._journal_load()
             if self.cfg.warm_on_start:
@@ -111,11 +143,26 @@ class StudyServer:
 
     def _journal_load(self):
         path = self._journal_path()
-        if path.exists():
+        if not path.exists():
+            return
+        try:
             data = json.loads(path.read_text())
-            self._journal = {int(k): v for k, v in data["inflight"].items()}
-            self._next_rid = max(data["next_rid"],
-                                 max(self._journal, default=-1) + 1)
+            inflight = {int(k): v for k, v in data["inflight"].items()}
+            next_rid = int(data["next_rid"])
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError,
+                AttributeError):
+            # A torn journal write must cost the in-flight replays, never
+            # wedge restart_server: quarantine the bad file for diagnosis
+            # and start from an empty journal.
+            n = 0
+            while (q := path.with_name(
+                    f"{JOURNAL_NAME}.corrupt-{n}")).exists():
+                n += 1
+            path.replace(q)
+            self.stats["quarantined_journals"] += 1
+            return
+        self._journal = inflight
+        self._next_rid = max(next_rid, max(self._journal, default=-1) + 1)
 
     def _journal_save(self):
         if self.warm is None:
@@ -148,7 +195,7 @@ class StudyServer:
         self._next_rid += 1
         raw = spec if isinstance(spec, dict) else None
         try:
-            study = build_study(spec)
+            study = self._build_cached(spec, raw)
         except ValueError as e:
             return self._resolve(Response(rid, _rq.REJECTED_MALFORMED,
                                           error=str(e)))
@@ -158,9 +205,23 @@ class StudyServer:
                 rid, _rq.REJECTED_OVERSIZED,
                 error=f"request folds to {lanes} lanes > max_lanes="
                       f"{self.cfg.max_lanes}; split the study"))
+        dl = deadline_s or self.cfg.default_deadline_s
+        # Deadline accounting includes queue wait: a request predicted to
+        # expire *before the worker reaches it* is shed now, as overload —
+        # dispatching it late would burn worker time on a guaranteed
+        # timeout and delay every request queued behind it.
+        if self._service_ema > 0.0:
+            est_wait = self._service_ema * (len(self.queue) + 1)
+            if est_wait > dl:
+                return self._resolve(Response(
+                    rid, _rq.REJECTED_OVERLOAD,
+                    error=f"would expire while queued: estimated "
+                          f"completion in {est_wait:.1f}s (queue depth "
+                          f"{len(self.queue)}) exceeds the {dl:.1f}s "
+                          f"deadline; shed at admission"))
         req = StudyRequest(
             rid=rid, study=study, spec=raw,
-            deadline_s=deadline_s or self.cfg.default_deadline_s,
+            deadline_s=dl,
             submitted_at=self.clock.now())
         if not self.queue.offer(req):
             return self._resolve(Response(
@@ -169,20 +230,63 @@ class StudyServer:
         self._journal_add(req)
         return rid
 
+    def _build_cached(self, spec, raw: dict | None):
+        """Build the request's Study, reusing the resident instance for a
+        repeat JSON spec.  A resident service sees the same study specs
+        over and over (the same reason the warm manifest exists); `Study`
+        caches its synthesized+prepared trace tensors per instance, so
+        reusing the instance answers repeats without re-running trace
+        synthesis.  `Study.run` is pure — sharing one instance across
+        queued requests (even within one coalesced group) is safe."""
+        if raw is None or self.cfg.study_cache <= 0:
+            return build_study(spec)
+        key = json.dumps(raw, sort_keys=True, default=str)
+        cached = self._study_cache.pop(key, None)
+        if cached is not None:
+            self._study_cache[key] = cached  # re-insert: LRU order
+            self.stats["study_cache_hits"] += 1
+            return cached
+        study = build_study(spec)
+        self._study_cache[key] = study
+        while len(self._study_cache) > self.cfg.study_cache:
+            self._study_cache.pop(next(iter(self._study_cache)))
+        return study
+
     # -- the request loop ---------------------------------------------------
 
-    def step(self) -> Response | None:
-        """Serve the oldest queued request (None when idle or crashed)."""
+    def step(self) -> Response | list[Response] | None:
+        """Serve the oldest queued request (None when idle or crashed).
+        With ``cfg.coalesce`` the step serves the head's whole compatible
+        *group* in one shared dispatch and returns the list of responses it
+        resolved; otherwise the PR-6 single-request loop, one Response."""
         if self.crashed:
             return None
         req = self.queue.pop()
-        return None if req is None else self._process(req)
+        if req is None:
+            return None
+        t0 = self.clock.now()
+        out = (self._step_coalesced(req) if self.cfg.coalesce
+               else self._process(req))
+        resolved = out if isinstance(out, list) else [out]
+        # Hang/crash steps don't inform the estimate: their duration is a
+        # fault timeout, not service, and the worker has been replaced —
+        # folding them in would shed admissions a healthy worker can meet.
+        if all(r.status not in (_rq.TIMEOUT, _rq.CRASHED) for r in resolved):
+            self._observe_service(
+                (self.clock.now() - t0) / max(len(resolved), 1))
+        return out
+
+    def _observe_service(self, s: float):
+        """EMA of per-request service time — the admission-shed estimate."""
+        s = max(s, 0.0)
+        self._service_ema = (s if self._service_ema == 0.0
+                             else 0.8 * self._service_ema + 0.2 * s)
 
     def drain(self) -> list[Response]:
         """Serve until the queue is empty (or the worker crashes)."""
         out = []
         while (r := self.step()) is not None:
-            out.append(r)
+            out.extend(r if isinstance(r, list) else [r])
         return out
 
     # -- processing: retry -> degrade, under deadline + heartbeat -----------
@@ -193,16 +297,20 @@ class StudyServer:
         self._journal_clear(resp.rid)
         return resp
 
-    def _cancel_check(self, req: StudyRequest):
-        """The cancellation point: every dispatch passes through here."""
-        now = self.clock.now()
-        if WORKER in self.hb.dead_hosts(now=now):
+    def _hang_check(self):
+        """Worker-liveness half of the cancellation point (also the whole
+        check for coalesced dispatches, which have no single deadline)."""
+        if WORKER in self.hb.dead_hosts(now=self.clock.now()):
             self.stats["hangs_detected"] += 1
             self._replace_worker("heartbeat stale (hang)")
             raise DeadlineExceeded(
                 f"worker heartbeat stale past "
                 f"{self.cfg.heartbeat_timeout_s:.0f}s (hang detected)")
-        if now > req.deadline():
+
+    def _cancel_check(self, req: StudyRequest):
+        """The cancellation point: every dispatch passes through here."""
+        self._hang_check()
+        if self.clock.now() > req.deadline():
             raise DeadlineExceeded(
                 f"deadline {req.deadline_s:.1f}s exceeded")
 
@@ -301,6 +409,235 @@ class StudyServer:
         self.responses[req.rid] = resp
         self.stats[_rq.CRASHED] += 1
         return resp
+
+    # -- cross-request lane coalescing (repro.serve.coalesce) ---------------
+
+    def _step_coalesced(self, head: StudyRequest) -> list[Response]:
+        """Serve the head request's whole compatible group in one shared
+        blessed-width dispatch; incompatible (multi-bucket / over-budget)
+        heads fall back to the single-request loop."""
+        budget = min(self.cfg.max_batch_lanes, BLESSED_LANE_WIDTHS[-1])
+        try:
+            key = group_key(head.study)
+        except Exception:
+            key = None  # synthesis failure: let _process surface it
+        if key is None or head.study.num_points > budget:
+            return [self._process(head)]
+
+        total = head.study.num_points
+
+        def compat(r: StudyRequest) -> bool:
+            nonlocal total
+            if total + r.study.num_points > budget:
+                return False
+            try:
+                if group_key(r.study) != key:
+                    return False
+            except Exception:
+                return False
+            total += r.study.num_points
+            return True
+
+        members = [head] + self.queue.take(compat)
+        self.stats["coalesced_groups"] += 1
+
+        # Members already past their deadline time out at group formation —
+        # stacking them would waste lanes on a guaranteed-late answer.
+        now = self.clock.now()
+        out, live = [], []
+        for r in members:
+            if now > r.deadline():
+                out.append(self._resolve(Response(
+                    r.rid, _rq.TIMEOUT,
+                    error=f"deadline {r.deadline_s:.1f}s exceeded while "
+                          f"queued",
+                    latency_s=now - r.submitted_at)))
+            else:
+                live.append(r)
+        if live:
+            results: dict[int, Response] = {}
+            self._bisect_serve(key, live, [], results)
+            out.extend(results[r.rid] for r in live)
+        return out
+
+    def _dispatch_coalesced(self, key, members: list[StudyRequest]):
+        """ONE batched engine execution for the whole group: member lanes
+        stacked in member order, padded to the blessed width with masked
+        sentinel lanes.  Returns ``(accs, slices, width)`` with host-side
+        accumulators carrying the stacked lane axis."""
+        self.hb.beat(WORKER, 0, now=self.clock.now())
+        stt, shw, scfg, slices, width = stack_group(
+            key, [(r.rid, r.study) for r in members])
+        rids = [s.rid for s in slices]
+
+        def boundary(m, thunk):
+            self._hang_check()
+            if self.chaos is not None:
+                self.chaos.on_coalesced_dispatch(
+                    rids, Dispatch(engine="coalesced", mechanism=m,
+                                   lanes=width))
+            self._hang_check()
+            now = self.clock.now()
+            self.hb.beat(WORKER, 0, now=now)
+            acc = thunk()
+            done = self.clock.now()
+            self.hb.beat(WORKER, 0, now=done)
+            self.stragglers.observe(WORKER, max(done - now, 1e-9))
+            return acc
+
+        self.stats["coalesced_dispatches"] += 1
+        accs = _engine._sweep_accs(stt, shw, key.mechanisms, scfg,
+                                   boundary=boundary)
+        if self.chaos is not None:
+            accs = self.chaos.corrupt_accs(
+                [(s.rid, s.slice) for s in slices], accs)
+        return accs, slices, width
+
+    def _bisect_serve(self, key, members: list[StudyRequest],
+                      trace: list[dict], results: dict[int, Response]):
+        """Serve a member set through one coalesced dispatch, bisecting on
+        failure: a failed/hung multi-member dispatch splits in half and
+        recurses (each recursion halves, so termination is structural); a
+        failed singleton IS the poison and is quarantined with the
+        accumulated bisection ``trace`` instead of retried forever.
+        Healthy halves are answered from their own successful
+        sub-dispatches — the blast radius of a poison request is bounded
+        at one."""
+        rids = [r.rid for r in members]
+        try:
+            accs, slices, width = self._dispatch_coalesced(key, members)
+        except SimulatedCrash as e:
+            self.crashed = True
+            self._replace_worker("worker crash")
+            trace.append({"members": rids, "outcome": f"crash: {e}"})
+            now = self.clock.now()
+            for r in members:
+                resp = Response(r.rid, _rq.CRASHED, attempts=1,
+                                error=str(e),
+                                latency_s=now - r.submitted_at)
+                self.responses[r.rid] = resp
+                self.stats[_rq.CRASHED] += 1
+                results[r.rid] = resp  # journal kept: replay re-answers
+            return
+        except Exception as e:
+            trace.append({"members": rids, "outcome": f"failed: {e}"})
+            if len(members) == 1:
+                results[rids[0]] = self._quarantine(
+                    members[0],
+                    f"poison request isolated by bisection: every "
+                    f"coalesced dispatch containing it failed (last: {e})",
+                    trace)
+                return
+            self.stats["bisections"] += 1
+            mid = len(members) // 2
+            self._bisect_serve(key, members[:mid], trace, results)
+            if not self.crashed:
+                self._bisect_serve(key, members[mid:], trace, results)
+            return
+
+        trace.append({"members": rids, "width": width, "outcome": "ok"})
+        if self.warm is not None:
+            self.warm.record_entries(group_warm_entries(key, width))
+        self._settle_group(key, members, accs, slices, trace, results)
+
+    def _settle_group(self, key, members, accs, slices, trace, results):
+        """Split a successful dispatch back per request: every lane passes
+        the finalize integrity sentinel (NaN/Inf/negative → lane-exact
+        quarantine), then a deterministic Threefry sample of the surviving
+        lanes is audited against the sequential reference; any mismatch
+        degrades the whole sub-batch to sequential (bit-exact by the PR-4
+        harness), because a corrupt-but-finite accumulator has no
+        trustworthy lane attribution."""
+        now = self.clock.now()
+        healthy = []  # (request, finalized ResultSet)
+        for r, s in zip(members, slices):
+            member_accs = {m: {k: v[s.slice] for k, v in acc.items()}
+                           for m, acc in accs.items()}
+            try:
+                rs = r.study.points_from_lane_accs(member_accs)
+            except ResultIntegrityError as e:
+                results[r.rid] = self._quarantine(
+                    r, f"per-lane integrity sentinel tripped in coalesced "
+                       f"dispatch (lane-exact attribution): {e}", trace)
+                continue
+            healthy.append((r, rs))
+
+        owners = [(r, rs, local) for r, rs in healthy
+                  for local in range(len(rs.points))]
+        sample = audit_sample(self.cfg.seed, self._group_tag, len(owners),
+                              self.cfg.audit_fraction)
+        self._group_tag += 1
+        mismatch = None
+        for lane in sample:
+            self.stats["audit_lanes"] += 1
+            r, rs, local = owners[lane]
+            if not self._audit_lane(r, rs, local, key.mechanisms):
+                mismatch = (r.rid, lane)
+                break
+
+        if mismatch is None:
+            for r, rs in healthy:
+                results[r.rid] = self._resolve(Response(
+                    r.rid, _rq.OK, results=rs, engine="coalesced",
+                    attempts=1,
+                    latency_s=self.clock.now() - r.submitted_at))
+            return
+
+        # Audit mismatch: the answer is wrong but finite, so no lane can
+        # be trusted — recompute every member on the sequential reference.
+        self.stats["audit_mismatches"] += 1
+        trace.append({"members": [r.rid for r, _ in healthy],
+                      "outcome": f"audit mismatch (rid={mismatch[0]}, "
+                                 f"lane={mismatch[1]}): degrading batch "
+                                 f"to sequential"})
+        for r, _ in healthy:
+            try:
+                rs = r.study.run(engine="sequential",
+                                 on_dispatch=self._boundary(r, 0))
+                results[r.rid] = self._resolve(Response(
+                    r.rid, _rq.OK_DEGRADED, results=rs,
+                    engine="sequential", attempts=1,
+                    error="audit mismatch in coalesced batch; recomputed "
+                          "on the sequential reference",
+                    latency_s=self.clock.now() - r.submitted_at))
+            except DeadlineExceeded as e:
+                results[r.rid] = self._resolve(Response(
+                    r.rid, _rq.TIMEOUT, attempts=1, error=str(e),
+                    latency_s=self.clock.now() - r.submitted_at))
+
+    def _audit_lane(self, req: StudyRequest, rs, local: int,
+                    mechanisms) -> bool:
+        """Spot-check one served lane field-exactly against the sequential
+        reference (bit-exact with the batched planner by the PR-4
+        cross-engine harness — any difference means corruption)."""
+        st = req.study
+        (bl,) = st.bucket_lanes()
+        w, h, li = st._lanes()[bl.lane_points[local]]
+        point = rs.points[local]
+        for m in mechanisms:
+            ref = _engine.run_mechanism(st.traces()[w], st.hw_points()[h],
+                                        m, st.lazy_points()[li])
+            if dataclasses.asdict(ref) != dataclasses.asdict(
+                    point.results[m]):
+                return False
+        return True
+
+    def _quarantine(self, req: StudyRequest, reason: str,
+                    trace: list[dict]) -> Response:
+        """Terminal isolation of a poison request: the diagnostic record
+        (reason + full bisection trace + the raw spec) lands in
+        ``self.quarantine`` for offline analysis, the journal entry is
+        cleared so no restart replays it, and the caller gets an explicit
+        ``quarantined`` response — never an infinite retry loop."""
+        self.quarantine[req.rid] = {
+            "rid": req.rid,
+            "reason": reason,
+            "spec": req.spec,
+            "bisection": [dict(ev) for ev in trace],
+        }
+        return self._resolve(Response(
+            req.rid, _rq.QUARANTINED, error=reason,
+            latency_s=self.clock.now() - req.submitted_at))
 
     # -- crash recovery -----------------------------------------------------
 

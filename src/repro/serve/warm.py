@@ -48,10 +48,21 @@ from repro.sim.prep import CPUWS_REGS, TraceTensors, bucket_shapes, packed_words
 from repro.sim.study import Study
 
 MANIFEST_NAME = "warm_manifest.json"
+MANIFEST_SCHEMA_VERSION = 1
 
 _GEOMETRY_KEYS = ("num_lines", "num_windows", "num_kernels",
                   "pim_read_slots", "pim_write_slots",
                   "cpu_read_slots", "cpu_write_slots")
+_ENTRY_KEYS = frozenset((*_GEOMETRY_KEYS, "mechanism", "lanes", "spec",
+                         "lazy_static"))
+
+
+class ManifestCorruptError(ValueError):
+    """The warm manifest on disk is truncated, corrupt, or from an
+    incompatible schema version.  :meth:`WarmCache.load_manifest` raises
+    this internally, then *quarantines* the bad file (renamed to
+    ``warm_manifest.json.corrupt-N``) and rebuilds from empty — a torn
+    write must cost the warm state, never wedge ``restart_server``."""
 
 
 def enable_persistent_cache(cache_dir: str | pathlib.Path) -> bool:
@@ -101,16 +112,19 @@ def _entry_key(e: dict) -> str:
     return json.dumps(e, sort_keys=True)
 
 
-def dummy_stacked(entry: dict):
-    """Build the (stacked trace, stacked hw, stacked lazy) triple whose jit
-    key equals the entry's compile key: exact bucket geometry and lane
-    count, all access slots sentinel-empty, every window invalid.  The
-    per-line tables are the real H3 positions those line ids hash to —
-    identical to what ``pad_trace`` would produce — so the static spec
-    metadata matches byte-for-byte."""
-    spec = SignatureSpec(**entry["spec"])
-    n, w, k = entry["num_lines"], entry["num_windows"], entry["num_kernels"]
-    lanes = entry["lanes"]
+def dummy_trace(spec: SignatureSpec, *, num_lines: int, num_windows: int,
+                num_kernels: int, pim_read_slots: int, pim_write_slots: int,
+                cpu_read_slots: int, cpu_write_slots: int) -> TraceTensors:
+    """An all-sentinel trace at an exact bucket geometry: no valid access
+    slots, every window invalid — each mechanism scan passes its carry
+    straight through, so the lane computes (and can contribute) nothing.
+    Shared by two consumers: the warm replay (same compile key as real
+    traffic, near-zero work) and the cross-request coalescer's *masked pad
+    lanes* (:mod:`repro.serve.coalesce`), which fill a coalesced dispatch
+    up to its blessed lane width.  The per-line tables are the real H3
+    positions those line ids hash to — identical to what ``pad_trace``
+    would produce — so the static spec metadata matches byte-for-byte."""
+    n, w, k = num_lines, num_windows, num_kernels
 
     def slots(width):
         return jnp.full((w, width), -1, jnp.int32)
@@ -118,20 +132,20 @@ def dummy_stacked(entry: dict):
     def valid(width):
         return jnp.zeros((w, width), jnp.bool_)
 
-    tt = TraceTensors(
+    return TraceTensors(
         name="", threads=0,  # pre-neutralized: same key as neutral_trace
         num_lines=n, num_windows=w, num_kernels=k, spec=spec,
         line_pos=hash_positions(
             spec, jnp.arange(n, dtype=jnp.uint32)).astype(jnp.int32),
         line_reg=jnp.arange(n, dtype=jnp.int32) % CPUWS_REGS,
-        pim_reads=slots(entry["pim_read_slots"]),
-        pim_writes=slots(entry["pim_write_slots"]),
-        cpu_reads=slots(entry["cpu_read_slots"]),
-        cpu_writes=slots(entry["cpu_write_slots"]),
-        pim_r_valid=valid(entry["pim_read_slots"]),
-        pim_w_valid=valid(entry["pim_write_slots"]),
-        cpu_r_valid=valid(entry["cpu_read_slots"]),
-        cpu_w_valid=valid(entry["cpu_write_slots"]),
+        pim_reads=slots(pim_read_slots),
+        pim_writes=slots(pim_write_slots),
+        cpu_reads=slots(cpu_read_slots),
+        cpu_writes=slots(cpu_write_slots),
+        pim_r_valid=valid(pim_read_slots),
+        pim_w_valid=valid(pim_write_slots),
+        cpu_r_valid=valid(cpu_read_slots),
+        cpu_w_valid=valid(cpu_write_slots),
         kernel_id=jnp.zeros((w,), jnp.int32),
         kernel_start=jnp.zeros((w,), jnp.bool_),
         kernel_end=jnp.zeros((w,), jnp.bool_),
@@ -147,6 +161,15 @@ def dummy_stacked(entry: dict):
         pim_uniq=jnp.zeros((w,), jnp.float32),
         window_valid=jnp.zeros((w,), jnp.bool_),
     )
+
+
+def dummy_stacked(entry: dict):
+    """Build the (stacked trace, stacked hw, stacked lazy) triple whose jit
+    key equals a manifest entry's compile key: exact bucket geometry and
+    lane count, every lane the all-sentinel :func:`dummy_trace`."""
+    tt = dummy_trace(SignatureSpec(**entry["spec"]),
+                     **{k: entry[k] for k in _GEOMETRY_KEYS})
+    lanes = entry["lanes"]
     stt = _engine.stack_traces([tt] * lanes)
     shw = _engine.stack_hw([HWParams()] * lanes)
     scfg = _engine.stack_lazy(
@@ -162,24 +185,75 @@ class WarmCache:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.manifest_path = self.dir / MANIFEST_NAME
         self.persistent = enable_persistent_cache(self.dir)
+        self.quarantined_manifests = 0  # corrupt files set aside, not read
+
+    def _parse_manifest(self, text: str) -> list[dict]:
+        """Strict manifest parse; any deviation is a named
+        :class:`ManifestCorruptError` (the caller quarantines)."""
+        try:
+            payload = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise ManifestCorruptError(
+                f"{self.manifest_path}: not valid JSON (truncated or "
+                f"corrupt write): {e}") from e
+        if not isinstance(payload, dict) or "entries" not in payload:
+            raise ManifestCorruptError(
+                f"{self.manifest_path}: expected an object with an "
+                f"'entries' list")
+        # Pre-stamp manifests (written before the schema_version field
+        # existed) are the version-1 entry layout; a missing field loads.
+        version = payload.get("schema_version", MANIFEST_SCHEMA_VERSION)
+        if version != MANIFEST_SCHEMA_VERSION:
+            raise ManifestCorruptError(
+                f"{self.manifest_path}: schema_version {version!r} "
+                f"unsupported (this build reads "
+                f"{MANIFEST_SCHEMA_VERSION})")
+        entries = payload["entries"]
+        if not isinstance(entries, list) or not all(
+                isinstance(e, dict) and _ENTRY_KEYS <= set(e)
+                for e in entries):
+            raise ManifestCorruptError(
+                f"{self.manifest_path}: malformed entry rows (want "
+                f"{sorted(_ENTRY_KEYS)} per entry)")
+        return entries
 
     def load_manifest(self) -> list[dict]:
+        """Manifest entries, or ``[]``.  A corrupt/truncated/incompatible
+        manifest is *quarantined* — renamed to ``warm_manifest.json
+        .corrupt-N`` for diagnosis — and the warm state rebuilds from
+        empty; ``restart_server`` must never wedge on a torn write."""
         if not self.manifest_path.exists():
             return []
-        return json.loads(self.manifest_path.read_text())["entries"]
+        try:
+            return self._parse_manifest(self.manifest_path.read_text())
+        except ManifestCorruptError:
+            n = 0
+            while (q := self.manifest_path.with_name(
+                    f"{MANIFEST_NAME}.corrupt-{n}")).exists():
+                n += 1
+            self.manifest_path.replace(q)
+            self.quarantined_manifests += 1
+            return []
 
     def record(self, study: Study) -> int:
         """Merge a served study's planner tuples into the manifest
         (idempotent; crash-safe via atomic rename).  Returns the number of
         new entries."""
+        return self.record_entries(study_warm_entries(study))
+
+    def record_entries(self, new_entries: list[dict]) -> int:
+        """Merge compile-key entry rows into the manifest — the shared
+        write path for per-study tuples (:meth:`record`) and the
+        coalescer's blessed-width group tuples
+        (:func:`repro.serve.coalesce.group_warm_entries`)."""
         entries = self.load_manifest()
         seen = {_entry_key(e) for e in entries}
-        fresh = [e for e in study_warm_entries(study)
-                 if _entry_key(e) not in seen]
+        fresh = [e for e in new_entries if _entry_key(e) not in seen]
         if fresh:
             tmp = self.manifest_path.with_suffix(".tmp")
             tmp.write_text(json.dumps(
-                {"entries": entries + fresh}, indent=2) + "\n")
+                {"schema_version": MANIFEST_SCHEMA_VERSION,
+                 "entries": entries + fresh}, indent=2) + "\n")
             tmp.replace(self.manifest_path)
         return len(fresh)
 

@@ -48,6 +48,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.coherence import LazyPIMConfig, _lazypim_acc, simulate_lazypim
 from repro.core.mechanisms import (
@@ -118,8 +119,9 @@ def stack_hw(hws: list[HWParams]) -> HWParams:
     dtypes = hw_leaf_dtypes()
     kw = {}
     for f in dataclasses.fields(HWParams):
-        kw[f.name] = jnp.asarray([getattr(h, f.name) for h in hws],
-                                 dtype=dtypes[f.name])
+        kw[f.name] = jnp.asarray(np.asarray(
+            [getattr(h, f.name) for h in hws],
+            dtype=np.dtype(dtypes[f.name])))
     return HWParams(**kw)
 
 
@@ -151,7 +153,8 @@ def stack_lazy(cfgs: list[LazyPIMConfig]) -> LazyPIMConfig:
                     f"stacked sweep")
     kw = {f: getattr(c0, f) for f in _LAZY_STATIC_FIELDS}
     for name, dt in _LAZY_DATA_DTYPES.items():
-        kw[name] = jnp.asarray([getattr(c, name) for c in cfgs], dtype=dt)
+        kw[name] = jnp.asarray(np.asarray(
+            [getattr(c, name) for c in cfgs], dtype=np.dtype(dt)))
     return LazyPIMConfig(**kw)
 
 
@@ -181,7 +184,11 @@ def stack_traces(tts: list[TraceTensors]) -> TraceTensors:
                              f"{t0.name} (run_batch buckets mixed fleets)")
     fields = {f.name: getattr(t0, f.name) for f in dataclasses.fields(t0)}
     for key in TRACE_DATA_FIELDS:
-        fields[key] = jnp.stack([getattr(t, key) for t in tts])
+        # Host-side stack + one device put per field: jnp.stack on a list
+        # of device arrays issues expand_dims+concatenate per *element*,
+        # whose dispatch overhead dominates wide (coalesced) stacks.
+        fields[key] = jnp.asarray(
+            np.stack([np.asarray(getattr(t, key)) for t in tts]))
     return TraceTensors(**fields)
 
 

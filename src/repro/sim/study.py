@@ -69,9 +69,23 @@ from repro.sim.prep import TraceTensors, bucket_shapes, pad_trace, prepare
 from repro.sim.trace import ALL_APPS, GRAPH_INPUTS, make_trace
 
 __all__ = [
-    "Study", "StudyPlan", "StudyPoint", "ResultSet",
-    "Workload", "workload", "HWGrid", "grid", "Dispatch",
+    "Study", "StudyPlan", "StudyPoint", "ResultSet", "ResultSetSchemaError",
+    "Workload", "workload", "HWGrid", "grid", "Dispatch", "BucketLanes",
+    "RESULTSET_SCHEMA_VERSION",
 ]
+
+# Version stamp written into every ResultSet.save_json payload.  load_json
+# accepts this version and (for pre-stamp golden artifacts) a missing field;
+# anything else is a named ResultSetSchemaError, never a raw KeyError.
+RESULTSET_SCHEMA_VERSION = 1
+
+
+class ResultSetSchemaError(ValueError):
+    """A persisted ResultSet artifact is truncated, corrupt, or from an
+    incompatible schema version.  Raised by :meth:`ResultSet.load_json`
+    instead of leaking ``json.JSONDecodeError`` / ``KeyError`` — callers
+    (golden tests, the serve layer's artifacts) get one named error with
+    the path and the reason."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -298,6 +312,7 @@ class ResultSet:
         """Serialize the full result set (coordinates + hw/lazy configs +
         every SimResult field) — the golden-test artifact format."""
         payload = {
+            "schema_version": RESULTSET_SCHEMA_VERSION,
             "mechanisms": list(self.mechanisms),
             "points": [{
                 "workload": p.workload,
@@ -315,14 +330,60 @@ class ResultSet:
 
     @classmethod
     def load_json(cls, path: str | pathlib.Path) -> "ResultSet":
-        payload = json.loads(pathlib.Path(path).read_text())
-        points = [StudyPoint(
-            workload=d["workload"], hw_index=d["hw_index"],
-            lazy_index=d["lazy_index"], hw=HWParams(**d["hw"]),
-            lazy=LazyPIMConfig(**d["lazy"]),
-            results={m: SimResult(**r) for m, r in d["results"].items()},
-        ) for d in payload["points"]]
-        return cls(points, tuple(payload["mechanisms"]))
+        """Load a :meth:`save_json` artifact.  A truncated, corrupt, or
+        version-incompatible file raises :class:`ResultSetSchemaError`
+        naming the path and the reason — never a raw ``JSONDecodeError`` /
+        ``KeyError`` / ``TypeError`` that callers (golden tests, the serve
+        layer's restart path) would have to guess at."""
+        path = pathlib.Path(path)
+        try:
+            payload = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            raise ResultSetSchemaError(
+                f"{path}: not valid JSON (truncated or corrupt): {e}") \
+                from e
+        if not isinstance(payload, dict):
+            raise ResultSetSchemaError(
+                f"{path}: expected a JSON object, got "
+                f"{type(payload).__name__}")
+        # Pre-stamp artifacts (the committed goldens) carry no version
+        # field; they are the version-1 layout, so a missing field loads.
+        version = payload.get("schema_version", RESULTSET_SCHEMA_VERSION)
+        if version != RESULTSET_SCHEMA_VERSION:
+            raise ResultSetSchemaError(
+                f"{path}: schema_version {version!r} unsupported (this "
+                f"build reads version {RESULTSET_SCHEMA_VERSION})")
+        try:
+            points = [StudyPoint(
+                workload=d["workload"], hw_index=d["hw_index"],
+                lazy_index=d["lazy_index"], hw=HWParams(**d["hw"]),
+                lazy=LazyPIMConfig(**d["lazy"]),
+                results={m: SimResult(**r) for m, r in d["results"].items()},
+            ) for d in payload["points"]]
+            return cls(points, tuple(payload["mechanisms"]))
+        except (KeyError, TypeError, AttributeError) as e:
+            raise ResultSetSchemaError(
+                f"{path}: malformed ResultSet payload "
+                f"({type(e).__name__}: {e})") from e
+
+
+@dataclasses.dataclass
+class BucketLanes:
+    """One geometry bucket's stacked execution unit, fully materialized:
+    the pad-target ``shape`` (``pad_trace`` kwargs — also the compiled
+    scan's geometry key), the study point indices riding this bucket
+    (``lane_points``, in point order — lane ``i`` of the dispatch IS point
+    ``lane_points[i]``), and the per-lane padded trace / hw / lazy triples
+    ready for :func:`repro.sim.engine.stack_traces` & co.  This is the
+    currency the serve layer's cross-request coalescer trades in: lanes
+    from different requests with equal ``shape`` (+ spec + static flags)
+    stack into one dispatch and split back by lane slice."""
+
+    shape: dict[str, int]
+    lane_points: list[int]
+    traces: list[TraceTensors]
+    hws: list[HWParams]
+    lazys: list[LazyPIMConfig]
 
 
 # ---------------------------------------------------------------------------
@@ -434,6 +495,7 @@ class Study:
                         f"ResultSet.concat the results")
         self._lazys = lazys
         self._tts: list[TraceTensors] | None = None
+        self._bls: list[BucketLanes] | None = None
 
     # -- axis materialization ----------------------------------------------
 
@@ -505,6 +567,65 @@ class Study:
         return StudyPlan(buckets=tuple(buckets), mechanisms=self.mechanisms,
                          num_points=len(lanes))
 
+    # -- lane materialization ------------------------------------------------
+
+    def bucket_lanes(self) -> list[BucketLanes]:
+        """The batched execution units: one :class:`BucketLanes` per
+        geometry bucket, each carrying its padded per-lane trace / hw /
+        lazy triples in point order (cached — padding is paid once per
+        study, however many times the serve layer re-dispatches it)."""
+        if self._bls is None:
+            tts, hws = self.traces(), self.hw_points()
+            lazys, lanes = self.lazy_points(), self._lanes()
+            out = []
+            for idx, shape in bucket_shapes(tts):
+                members = set(idx)
+                sel = [j for j, lane in enumerate(lanes)
+                       if lane[0] in members]
+                if not sel:
+                    continue
+                padded = {w: pad_trace(tts[w], **shape) for w in idx}
+                out.append(BucketLanes(
+                    shape=shape, lane_points=sel,
+                    traces=[padded[lanes[j][0]] for j in sel],
+                    hws=[hws[lanes[j][1]] for j in sel],
+                    lazys=[lazys[lanes[j][2]] for j in sel]))
+            self._bls = out
+        return self._bls
+
+    def _make_point(self, j: int, results: dict[str, SimResult]) -> StudyPoint:
+        tts, hws, lazys = self.traces(), self.hw_points(), self.lazy_points()
+        w, h, li = self._lanes()[j]
+        return StudyPoint(workload=tts[w].name, hw_index=h, lazy_index=li,
+                          hw=hws[h], lazy=lazys[li], results=results)
+
+    def points_from_lane_accs(self, accs: dict[str, dict]) -> ResultSet:
+        """Split stacked accumulators back into this study's tagged points:
+        ``accs`` maps mechanism → host accumulator dict whose arrays carry a
+        leading lane axis of length ``num_points``, ordered like the
+        single bucket's ``lane_points``.  This is the result-splitting half
+        of cross-request coalescing (:mod:`repro.serve.coalesce`): the
+        server slices the group dispatch's lane axis per request and hands
+        each request's slab here.  Only valid for single-bucket studies
+        (the coalescer's admission rule), where lane order == point order.
+        Every lane passes the :func:`repro.core.mechanisms.finalize_result`
+        integrity sentinel; a poisoned lane raises ``ResultIntegrityError``
+        naming the workload, mechanism and field."""
+        bls = self.bucket_lanes()
+        if len(bls) != 1:
+            raise ValueError(
+                f"points_from_lane_accs needs a single-bucket study, this "
+                f"one has {len(bls)} buckets (serve such studies "
+                f"uncoalesced)")
+        points = []
+        for pos, j in enumerate(bls[0].lane_points):
+            w = self._lanes()[j][0]
+            res = {m: finalize_result(self.traces()[w].name, m,
+                                      {k: v[pos] for k, v in acc.items()})
+                   for m, acc in accs.items()}
+            points.append(self._make_point(j, res))
+        return ResultSet(points, self.mechanisms)
+
     # -- execution ----------------------------------------------------------
 
     def run(self, engine: str = "batch", on_dispatch=None) -> ResultSet:
@@ -554,33 +675,24 @@ class Study:
         return ResultSet(points, self.mechanisms)
 
     def _run_batched(self, on_dispatch=None) -> ResultSet:
-        tts, hws, lazys = self.traces(), self.hw_points(), self.lazy_points()
-        lanes = self._lanes()
+        tts, lanes = self.traces(), self._lanes()
         points: list[StudyPoint | None] = [None] * len(lanes)
-        for idx, shape in bucket_shapes(tts):
-            members = set(idx)
-            sel = [j for j, lane in enumerate(lanes) if lane[0] in members]
-            if not sel:
-                continue
-            padded = {w: pad_trace(tts[w], **shape) for w in idx}
-            stacked = _engine.neutral_trace(_engine.stack_traces(
-                [padded[lanes[j][0]] for j in sel]))
-            shw = _engine.stack_hw([hws[lanes[j][1]] for j in sel])
-            scfg = _engine.stack_lazy([lazys[lanes[j][2]] for j in sel])
+        for bl in self.bucket_lanes():
+            stacked = _engine.neutral_trace(_engine.stack_traces(bl.traces))
+            shw = _engine.stack_hw(bl.hws)
+            scfg = _engine.stack_lazy(bl.lazys)
             boundary = None
             if on_dispatch is not None:
-                def boundary(m, thunk, _shape=shape, _n=len(sel)):
+                def boundary(m, thunk, _shape=bl.shape, _n=len(bl.traces)):
                     return on_dispatch(
                         Dispatch(engine="batch", mechanism=m, lanes=_n,
                                  bucket_lines=_shape["num_lines"]), thunk)
             accs = _engine._sweep_accs(stacked, shw, self.mechanisms, scfg,
                                        boundary=boundary)
-            for pos, j in enumerate(sel):
-                w, h, li = lanes[j]
+            for pos, j in enumerate(bl.lane_points):
+                w = lanes[j][0]
                 res = {m: finalize_result(tts[w].name, m,
                                           {k: v[pos] for k, v in acc.items()})
                        for m, acc in accs.items()}
-                points[j] = StudyPoint(workload=tts[w].name, hw_index=h,
-                                       lazy_index=li, hw=hws[h],
-                                       lazy=lazys[li], results=res)
+                points[j] = self._make_point(j, res)
         return ResultSet(points, self.mechanisms)
