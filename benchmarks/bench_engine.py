@@ -33,6 +33,11 @@ Usage: PYTHONPATH=src python -m benchmarks.run --bench engine
 
 from __future__ import annotations
 
+import json
+import os
+import re
+import subprocess
+import sys
 import time
 
 import jax
@@ -310,6 +315,45 @@ def bench_trace_synth() -> dict:
     return out
 
 
+MESH_DEVICE_COUNTS = (1, 2, 4)
+
+
+def bench_mesh_scaling(device_counts=MESH_DEVICE_COUNTS) -> dict:
+    """Sharded-dispatch throughput vs simulated device count: lanes/sec of
+    a >=1M-line htap128 bucket with 8 stacked lanes at 1/2/4 simulated CPU
+    devices.  The device count is baked into XLA at backend init, so each
+    point runs in its own subprocess (``benchmarks.mesh_worker``) with
+    ``XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT`` set; every worker also
+    cross-checks ``Study.plan()``'s compile prediction at its device count
+    (``check_budget.check_mesh`` gates the committed record on that)."""
+    from repro.sim.mesh import MESH_ENV_VAR, _XLA_FLAG
+
+    legs = {}
+    for d in device_counts:
+        env = dict(os.environ)
+        env[MESH_ENV_VAR] = str(d)
+        # The parent may have pinned its own count into XLA_FLAGS; strip it
+        # so the worker's env var (read at repro.sim.mesh import) wins.
+        if "XLA_FLAGS" in env:
+            env["XLA_FLAGS"] = re.sub(rf"{_XLA_FLAG}=\d+", "",
+                                      env["XLA_FLAGS"]).strip()
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.mesh_worker", str(d)],
+            env=env, capture_output=True, text=True, check=True)
+        legs[str(d)] = json.loads(proc.stdout.strip().splitlines()[-1])
+    base = legs[str(device_counts[0])]["lanes_per_sec"]
+    return {
+        **legs,
+        "scaling_vs_1_device": {d: legs[d]["lanes_per_sec"] / base
+                                for d in legs},
+        "note": "simulated CPU devices share the host's cores, so the "
+                "scaling ceiling is intra-op parallelism already present "
+                "at 1 device — the gate checks correctness (plan == "
+                "measured per device count) and throughput > 0, not a "
+                "linear speedup",
+    }
+
+
 def run() -> dict:
     hw, cfg = HWParams(), LazyPIMConfig()
     return {
@@ -320,6 +364,9 @@ def run() -> dict:
         "fig7_end_to_end_extended": bench_fig7_wall(hw),
         "hw_sweep": bench_sweep(hw, cfg),
         "trace_synth": bench_trace_synth(),
+        # Subprocess-isolated (own XLA device counts): parent jit caches
+        # are irrelevant, so order doesn't matter.
+        "mesh_scaling": bench_mesh_scaling(),
     }
 
 
@@ -350,6 +397,12 @@ def main():
             continue
         print(f"synth,{name},lines,{r['num_lines']},jax_ms,{r['jax_ms']:.2f},"
               f"ref_ms,{r['ref_ms']:.2f},speedup,{r['speedup']:.1f}")
+    ms = results["mesh_scaling"]
+    for d in map(str, MESH_DEVICE_COUNTS):
+        leg = ms[d]
+        print(f"mesh,{d}dev,lanes_per_sec,{leg['lanes_per_sec']:.4f},"
+              f"plan_matches,{leg['plan_matches_measured']},"
+              f"scaling,{ms['scaling_vs_1_device'][d]:.2f}x")
     print(f"wrote,{out_path}")
 
 

@@ -25,7 +25,10 @@ The committed ``BENCH_serve.json`` is gated alongside it: a post-crash warm
 restart of the serve layer must show zero new scan compiles
 (:func:`check_serve`), and the cross-request coalescing leg must show
 >= 2x studies/sec at queue depth >= 8 with zero steady-state scan compiles
-beyond the blessed-width budget (:func:`check_coalesce`).
+beyond the blessed-width budget (:func:`check_coalesce`).  The engine
+record's ``mesh_scaling`` section is gated too (:func:`check_mesh`): the
+4-simulated-device leg must be present with plan == measured compiles and
+real throughput at every device count.
 
 Usage: python -m benchmarks.check_budget [--live] [path-to-BENCH_engine.json]
 """
@@ -68,6 +71,46 @@ def check_committed(path: pathlib.Path) -> int:
         print(f"check_budget: OVER BUDGET ({compiles} > "
               f"{FLEET_COMPILE_BUDGET})", file=sys.stderr)
         return 1
+    return check_mesh(record, path)
+
+
+def check_mesh(record: dict, path: pathlib.Path) -> int:
+    """Gate the mesh-scaling leg of the engine record: the 4-simulated-
+    device point must be present, every measured device count must have
+    its ``Study.plan()`` compile prediction match the measured jit-cache
+    delta exactly (the planner's device-routing arithmetic is the thing
+    under test — a wrong mesh padding or routing rule shows up as a
+    phantom or missing compile), and sharded throughput must be real
+    (> 0 lanes/sec at every point)."""
+    ms = record.get("mesh_scaling")
+    if not ms:
+        print(f"check_budget: no mesh_scaling section in {path} — "
+              f"regenerate with `python -m benchmarks.run --bench engine`",
+              file=sys.stderr)
+        return 1
+    if "4" not in ms:
+        print(f"check_budget: mesh_scaling lacks the 4-device leg "
+              f"(have {sorted(k for k in ms if k.isdigit())})",
+              file=sys.stderr)
+        return 1
+    for d, leg in ms.items():
+        if not d.isdigit():
+            continue
+        print(f"check_budget: mesh {d} device(s): "
+              f"{leg['lanes_per_sec']:.4f} lanes/s over "
+              f"{leg['bucket_num_lines']} lines, plan_matches_measured="
+              f"{leg['plan_matches_measured']}")
+        if not leg["plan_matches_measured"]:
+            print(f"check_budget: mesh {d}-device leg: plan prediction != "
+                  f"measured compiles (plan "
+                  f"{leg['plan_compiles_per_mechanism']} vs measured "
+                  f"{leg['measured_compiles_per_mechanism']})",
+                  file=sys.stderr)
+            return 1
+        if not leg["lanes_per_sec"] > 0:
+            print(f"check_budget: mesh {d}-device leg has non-positive "
+                  f"throughput {leg['lanes_per_sec']}", file=sys.stderr)
+            return 1
     return 0
 
 

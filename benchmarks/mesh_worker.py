@@ -1,0 +1,80 @@
+"""Subprocess worker for the mesh-scaling benchmark: ONE device count.
+
+The lane-mesh device count is baked into XLA at backend init
+(``--xla_force_host_platform_device_count`` on CPU), so each point of the
+``mesh_scaling`` curve needs its own process.  ``bench_engine`` spawns
+this module once per device count with ``XLA_FORCE_HOST_PLATFORM_
+DEVICE_COUNT`` set; the worker runs a >=1M-line htap128 bucket with 8
+stacked lanes (an 8-point off-chip-bandwidth grid) through the sharded
+batch engine, cross-checks ``Study.plan()``'s compile prediction against
+the measured jit-cache deltas, and prints one JSON record on stdout.
+
+Usage: PYTHONPATH=src python -m benchmarks.mesh_worker [devices]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+# The env -> XLA_FLAGS translation must precede jax's first backend init.
+import repro.sim.mesh  # noqa: F401  isort: skip
+
+from repro.sim import engine, mesh
+from repro.sim.study import Study, grid, workload
+
+LANES = 8
+# htap128-large (the bench_engine SYNTH_CASES instance): >= 1M trace lines,
+# big enough that per-device scan work dominates shard_map dispatch cost.
+WORKLOAD_KW = dict(scale=0.06, num_kernels=24, windows_per_kernel=16)
+
+
+def run(devices: int | None = None) -> dict:
+    d = mesh.resolve_devices(devices)
+    study = Study(
+        workloads=[workload("htap128", **WORKLOAD_KW)],
+        hw=grid(offchip_bw_gbs=[float(16 * (i + 1)) for i in range(LANES)]),
+        mechanisms=engine.MECHANISMS)
+    study.traces()  # trace synthesis outside every timed region
+    plan = study.plan(devices=d)
+    (bucket,) = plan.buckets
+
+    before = engine.sweep_cache_sizes()
+    t0 = time.perf_counter()
+    study.run(devices=d)
+    cold_s = time.perf_counter() - t0
+    after = engine.sweep_cache_sizes()
+    measured = {m: after[m] - before[m] for m in after}
+
+    t0 = time.perf_counter()
+    study.run(devices=d)
+    warm_s = time.perf_counter() - t0
+
+    return {
+        "devices": d,
+        "visible_devices": mesh.available_devices(),
+        "lanes": study.num_points,
+        "padded_lanes": bucket["padded_lanes"],
+        "routed_devices": bucket["devices"],
+        "bucket_num_lines": bucket["num_lines"],
+        "plan_compiles_per_mechanism": plan.compiles_per_mechanism,
+        "measured_compiles_per_mechanism": measured,
+        "plan_matches_measured": measured == plan.compiles_per_mechanism,
+        "cold_wall_s": cold_s,
+        "warm_wall_s": warm_s,
+        # One "lane" = one (workload, hw) point simulated through every
+        # mechanism; warm wall excludes compiles, so this is the scaling
+        # quantity (same lane work at every device count — 8 % d == 0, no
+        # padding confound).
+        "lanes_per_sec": study.num_points / warm_s,
+    }
+
+
+def main():
+    devices = int(sys.argv[1]) if len(sys.argv) > 1 else None
+    print(json.dumps(run(devices)))
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,12 @@ import argparse
 import dataclasses
 import time
 
+# Simulated multi-device lane meshes: repro.sim.mesh translates
+# XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT into XLA_FLAGS at import time, which
+# must happen before jax's first backend init — so it is imported first
+# (same constraint as the XLA_FLAGS line atop launch/dryrun.py).
+import repro.sim.mesh  # noqa: F401  isort: skip
+
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -53,18 +53,25 @@ __all__ = [
 BLESSED_LANE_WIDTHS = (1, 2, 4, 8, 16, 32, 64)
 
 
-def blessed_width(n: int) -> int:
-    """The smallest blessed lane width >= ``n`` (the dispatch width a
-    ``n``-lane group pads to).  Groups wider than the largest blessed
-    width are a caller bug — the server caps its lane budget first."""
+def blessed_width(n: int, devices: int = 1) -> int:
+    """The smallest blessed lane width >= ``n`` that a ``devices``-wide
+    lane mesh can shard (the dispatch width a ``n``-lane group pads to).
+    Blessed widths stay the ONLY compile-key space — mesh multiples are
+    chosen *from* them, and since both are powers of two, any blessed
+    width >= the mesh size is automatically a mesh multiple.  Groups wider
+    than the largest blessed width are a caller bug — the server caps its
+    lane budget first."""
     if n < 1:
         raise ValueError(f"blessed_width needs n >= 1, got {n}")
+    if devices < 1:
+        raise ValueError(f"blessed_width needs devices >= 1, got {devices}")
     for w in BLESSED_LANE_WIDTHS:
-        if w >= n:
+        if w >= n and w % devices == 0:
             return w
     raise ValueError(
-        f"{n} lanes exceeds the largest blessed width "
-        f"{BLESSED_LANE_WIDTHS[-1]}; cap the group before padding")
+        f"{n} lanes / {devices} devices exceeds the largest blessed width "
+        f"{BLESSED_LANE_WIDTHS[-1]}; cap the group (and route to a pow2 "
+        f"device subset) before padding")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,14 +145,16 @@ def group_lanes(
     return traces, hws, lazys, slices
 
 
-def stack_group(key: GroupKey, members: list[tuple[int, Study]]):
+def stack_group(key: GroupKey, members: list[tuple[int, Study]],
+                devices: int = 1):
     """Build the stacked (trace, hw, lazy) pytrees for one coalesced
     dispatch: member lanes in member order, padded with all-sentinel
-    masked lanes (:func:`repro.serve.warm.dummy_trace` — zero contribution
-    by the window-validity masking) up to the blessed width.  Returns
+    masked lanes (:func:`repro.sim.prep.dummy_trace` — zero contribution
+    by the window-validity masking) up to the blessed width (the smallest
+    one a ``devices``-wide lane mesh divides).  Returns
     ``(stt, shw, scfg, slices, width)``."""
     traces, hws, lazys, slices = group_lanes(members)
-    width = blessed_width(len(traces))
+    width = blessed_width(len(traces), devices)
     pad = width - len(traces)
     if pad:
         shape = dict(key.shape)
@@ -159,16 +168,19 @@ def stack_group(key: GroupKey, members: list[tuple[int, Study]]):
     return stt, shw, scfg, slices, width
 
 
-def group_warm_entries(key: GroupKey, width: int) -> list[dict]:
+def group_warm_entries(key: GroupKey, width: int,
+                       devices: int = 1) -> list[dict]:
     """Warm-manifest rows for one coalesced dispatch — identical format to
     :func:`repro.serve.warm.study_warm_entries`, with the *blessed* lane
-    width as the lane count, so restart replay re-populates exactly the
-    compile keys coalesced traffic hits."""
+    width as the lane count and the lane-mesh size the dispatch sharded
+    over, so restart replay re-populates exactly the compile keys
+    coalesced traffic hits."""
     shape = dict(key.shape)
     return [{
         **{k: int(shape[k]) for k in _GEOMETRY_KEYS},
         "mechanism": m,
         "lanes": int(width),
+        "devices": int(devices),
         "spec": dataclasses.asdict(key.spec),
         "lazy_static": dict(key.lazy_static),
     } for m in key.mechanisms]

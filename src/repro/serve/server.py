@@ -69,6 +69,7 @@ from repro.serve.request import Response, StudyRequest, build_study
 from repro.serve.retry import RetryPolicy
 from repro.serve.warm import WarmCache
 from repro.sim import engine as _engine
+from repro.sim import mesh as _mesh
 from repro.sim.study import Dispatch
 
 WORKER = 0  # host id of the single in-process worker in the monitors
@@ -100,6 +101,9 @@ class ServeConfig:
     audit_fraction: float = 0.25    # lane fraction spot-checked sequentially
     study_cache: int = 32           # resident Studies reused for repeat
     #                                 specs (skips re-synthesis); 0 disables
+    devices: int | None = None      # lane-mesh width for batched dispatches
+    #                                 (None = every visible device; scarce-
+    #                                 lane dispatches route to pow2 subsets)
 
 
 class StudyServer:
@@ -128,7 +132,12 @@ class StudyServer:
         self.quarantine: dict[int, dict] = {}  # rid -> diagnostic record
         self._next_rid = 0
         self._journal: dict[int, dict] = {}
-        self._service_ema = 0.0  # per-request service-time estimate (s)
+        # Per-request service-time estimate (s); None until the first
+        # healthy observation.  None is the ONLY "unset" sentinel — 0.0 is
+        # a legitimate observation (fake test clocks, sub-resolution fast
+        # paths) that must decay through the EMA, not hard-reset it.
+        self._service_ema: float | None = None
+        self._devices = _mesh.resolve_devices(self.cfg.devices)
         self._group_tag = 0      # coalesced-dispatch counter (audit stream)
         self._study_cache: dict[str, object] = {}  # spec json -> Study (LRU)
         if self.warm:
@@ -210,7 +219,7 @@ class StudyServer:
         # expire *before the worker reaches it* is shed now, as overload —
         # dispatching it late would burn worker time on a guaranteed
         # timeout and delay every request queued behind it.
-        if self._service_ema > 0.0:
+        if self._service_ema is not None:
             est_wait = self._service_ema * (len(self.queue) + 1)
             if est_wait > dl:
                 return self._resolve(Response(
@@ -268,18 +277,27 @@ class StudyServer:
         out = (self._step_coalesced(req) if self.cfg.coalesce
                else self._process(req))
         resolved = out if isinstance(out, list) else [out]
-        # Hang/crash steps don't inform the estimate: their duration is a
-        # fault timeout, not service, and the worker has been replaced —
-        # folding them in would shed admissions a healthy worker can meet.
-        if all(r.status not in (_rq.TIMEOUT, _rq.CRASHED) for r in resolved):
-            self._observe_service(
-                (self.clock.now() - t0) / max(len(resolved), 1))
+        # Crash/quarantine steps don't inform the estimate: their wall is
+        # fault handling (hang timeouts accumulated across bisection
+        # sub-dispatches, worker replacement), not service — folding it in
+        # inflates the EMA until healthy admissions shed as overload.
+        # Members that timed out at group formation never consumed worker
+        # time either, so they don't count toward the per-request divisor;
+        # a step that resolved ONLY timeouts observes nothing.
+        if not any(r.status in (_rq.CRASHED, _rq.QUARANTINED)
+                   for r in resolved):
+            served = [r for r in resolved if r.status != _rq.TIMEOUT]
+            if served:
+                self._observe_service(
+                    (self.clock.now() - t0) / len(served))
         return out
 
     def _observe_service(self, s: float):
-        """EMA of per-request service time — the admission-shed estimate."""
+        """EMA of per-request service time — the admission-shed estimate.
+        ``None`` (never observed) seeds from the first sample; any float —
+        including a legitimate 0.0 from a fake clock — decays normally."""
         s = max(s, 0.0)
-        self._service_ema = (s if self._service_ema == 0.0
+        self._service_ema = (s if self._service_ema is None
                              else 0.8 * self._service_ema + 0.2 * s)
 
     def drain(self) -> list[Response]:
@@ -359,9 +377,10 @@ class StudyServer:
                 req.study.traces()
                 self.hb.beat(WORKER, attempt, now=self.clock.now())
                 rs = req.study.run(engine="batch",
-                                   on_dispatch=self._boundary(req, attempt))
+                                   on_dispatch=self._boundary(req, attempt),
+                                   devices=self._devices)
                 if self.warm is not None:
-                    self.warm.record(req.study)
+                    self.warm.record(req.study, devices=self._devices)
                 if attempt:
                     self.stats["retry_successes"] += 1
                 return finish(_rq.OK, rs, engine="batch",
@@ -466,8 +485,14 @@ class StudyServer:
         sentinel lanes.  Returns ``(accs, slices, width)`` with host-side
         accumulators carrying the stacked lane axis."""
         self.hb.beat(WORKER, 0, now=self.clock.now())
+        # Route the group like the planner routes a bucket: the largest
+        # pow2 device subset its real lanes fill.  The blessed width stays
+        # the compile key; every blessed width >= the (pow2) mesh size is
+        # already a mesh multiple, so sharding never adds compile keys.
+        d = _mesh.devices_for(sum(r.study.num_points for r in members),
+                              self._devices)
         stt, shw, scfg, slices, width = stack_group(
-            key, [(r.rid, r.study) for r in members])
+            key, [(r.rid, r.study) for r in members], devices=d)
         rids = [s.rid for s in slices]
 
         def boundary(m, thunk):
@@ -475,7 +500,7 @@ class StudyServer:
             if self.chaos is not None:
                 self.chaos.on_coalesced_dispatch(
                     rids, Dispatch(engine="coalesced", mechanism=m,
-                                   lanes=width))
+                                   lanes=width, devices=d))
             self._hang_check()
             now = self.clock.now()
             self.hb.beat(WORKER, 0, now=now)
@@ -487,7 +512,7 @@ class StudyServer:
 
         self.stats["coalesced_dispatches"] += 1
         accs = _engine._sweep_accs(stt, shw, key.mechanisms, scfg,
-                                   boundary=boundary)
+                                   boundary=boundary, devices=d)
         if self.chaos is not None:
             accs = self.chaos.corrupt_accs(
                 [(s.rid, s.slice) for s in slices], accs)
@@ -537,7 +562,10 @@ class StudyServer:
 
         trace.append({"members": rids, "width": width, "outcome": "ok"})
         if self.warm is not None:
-            self.warm.record_entries(group_warm_entries(key, width))
+            d = _mesh.devices_for(
+                sum(r.study.num_points for r in members), self._devices)
+            self.warm.record_entries(group_warm_entries(key, width,
+                                                        devices=d))
         self._settle_group(key, members, accs, slices, trace, results)
 
     def _settle_group(self, key, members, accs, slices, trace, results):

@@ -38,13 +38,15 @@ import json
 import pathlib
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.coherence import LazyPIMConfig
-from repro.core.signatures import SignatureSpec, hash_positions
+from repro.core.signatures import SignatureSpec
 from repro.sim import engine as _engine
+from repro.sim import mesh as _mesh
 from repro.sim.costmodel import HWParams
-from repro.sim.prep import CPUWS_REGS, TraceTensors, bucket_shapes, packed_words
+from repro.sim.prep import bucket_shapes, dummy_trace  # noqa: F401  (dummy_
+#   trace moved to prep — the canonical home shared with the coalescer and
+#   the planner's mesh pads — and is re-exported here for compatibility)
 from repro.sim.study import Study
 
 MANIFEST_NAME = "warm_manifest.json"
@@ -53,6 +55,9 @@ MANIFEST_SCHEMA_VERSION = 1
 _GEOMETRY_KEYS = ("num_lines", "num_windows", "num_kernels",
                   "pim_read_slots", "pim_write_slots",
                   "cpu_read_slots", "cpu_write_slots")
+# Required row fields.  "devices" (the lane-mesh size the dispatch sharded
+# over) is written by every current producer but deliberately NOT required:
+# pre-mesh manifests must keep loading, defaulting to 1 device at replay.
 _ENTRY_KEYS = frozenset((*_GEOMETRY_KEYS, "mechanism", "lanes", "spec",
                          "lazy_static"))
 
@@ -81,11 +86,13 @@ def enable_persistent_cache(cache_dir: str | pathlib.Path) -> bool:
         return False
 
 
-def study_warm_entries(study: Study) -> list[dict]:
+def study_warm_entries(study: Study, devices: int = 1) -> list[dict]:
     """The planner tuples a study's batched execution compiles: one entry
-    per (mechanism, geometry bucket) with the stacked lane count and the
-    static compile-key context (signature spec, static lazy flags).  JSON-
-    able — this is the manifest row format."""
+    per (mechanism, geometry bucket) with the stacked lane count, the
+    lane-mesh routing (``devices``, with the lane count padded to the mesh
+    multiple the dispatch actually compiled at) and the static compile-key
+    context (signature spec, static lazy flags).  JSON-able — this is the
+    manifest row format."""
     tts = study.traces()
     lanes = study._lanes()
     lazy0 = study.lazy_points()[0]
@@ -96,12 +103,14 @@ def study_warm_entries(study: Study) -> list[dict]:
         n_lanes = sum(1 for lane in lanes if lane[0] in members)
         if not n_lanes:
             continue
+        d = _mesh.devices_for(n_lanes, devices)
         spec = tts[idx[0]].spec
         for m in study.mechanisms:
             entries.append({
                 **{k: int(shape[k]) for k in _GEOMETRY_KEYS},
                 "mechanism": m,
-                "lanes": int(n_lanes),
+                "lanes": int(_mesh.mesh_lane_width(n_lanes, d)),
+                "devices": int(d),
                 "spec": dataclasses.asdict(spec),
                 "lazy_static": dict(static),
             })
@@ -110,57 +119,6 @@ def study_warm_entries(study: Study) -> list[dict]:
 
 def _entry_key(e: dict) -> str:
     return json.dumps(e, sort_keys=True)
-
-
-def dummy_trace(spec: SignatureSpec, *, num_lines: int, num_windows: int,
-                num_kernels: int, pim_read_slots: int, pim_write_slots: int,
-                cpu_read_slots: int, cpu_write_slots: int) -> TraceTensors:
-    """An all-sentinel trace at an exact bucket geometry: no valid access
-    slots, every window invalid — each mechanism scan passes its carry
-    straight through, so the lane computes (and can contribute) nothing.
-    Shared by two consumers: the warm replay (same compile key as real
-    traffic, near-zero work) and the cross-request coalescer's *masked pad
-    lanes* (:mod:`repro.serve.coalesce`), which fill a coalesced dispatch
-    up to its blessed lane width.  The per-line tables are the real H3
-    positions those line ids hash to — identical to what ``pad_trace``
-    would produce — so the static spec metadata matches byte-for-byte."""
-    n, w, k = num_lines, num_windows, num_kernels
-
-    def slots(width):
-        return jnp.full((w, width), -1, jnp.int32)
-
-    def valid(width):
-        return jnp.zeros((w, width), jnp.bool_)
-
-    return TraceTensors(
-        name="", threads=0,  # pre-neutralized: same key as neutral_trace
-        num_lines=n, num_windows=w, num_kernels=k, spec=spec,
-        line_pos=hash_positions(
-            spec, jnp.arange(n, dtype=jnp.uint32)).astype(jnp.int32),
-        line_reg=jnp.arange(n, dtype=jnp.int32) % CPUWS_REGS,
-        pim_reads=slots(pim_read_slots),
-        pim_writes=slots(pim_write_slots),
-        cpu_reads=slots(cpu_read_slots),
-        cpu_writes=slots(cpu_write_slots),
-        pim_r_valid=valid(pim_read_slots),
-        pim_w_valid=valid(pim_write_slots),
-        cpu_r_valid=valid(cpu_read_slots),
-        cpu_w_valid=valid(cpu_write_slots),
-        kernel_id=jnp.zeros((w,), jnp.int32),
-        kernel_start=jnp.zeros((w,), jnp.bool_),
-        kernel_end=jnp.zeros((w,), jnp.bool_),
-        pre_writes=jnp.zeros((k, n), jnp.bool_),
-        pre_writes_words=jnp.zeros((k, packed_words(n)), jnp.uint32),
-        pim_instr=jnp.zeros((w,), jnp.float32),
-        cpu_instr=jnp.zeros((w,), jnp.float32),
-        cpu_priv=jnp.zeros((w,), jnp.float32),
-        cpu_priv_miss_rate=jnp.zeros((), jnp.float32),
-        cpu_reuse=jnp.zeros((), jnp.float32),
-        pim_uniq_r=jnp.zeros((w,), jnp.float32),
-        pim_uniq_w=jnp.zeros((w,), jnp.float32),
-        pim_uniq=jnp.zeros((w,), jnp.float32),
-        window_valid=jnp.zeros((w,), jnp.bool_),
-    )
 
 
 def dummy_stacked(entry: dict):
@@ -186,6 +144,7 @@ class WarmCache:
         self.manifest_path = self.dir / MANIFEST_NAME
         self.persistent = enable_persistent_cache(self.dir)
         self.quarantined_manifests = 0  # corrupt files set aside, not read
+        self.skipped_entries = 0        # mesh entries this host cannot replay
 
     def _parse_manifest(self, text: str) -> list[dict]:
         """Strict manifest parse; any deviation is a named
@@ -235,11 +194,11 @@ class WarmCache:
             self.quarantined_manifests += 1
             return []
 
-    def record(self, study: Study) -> int:
+    def record(self, study: Study, devices: int = 1) -> int:
         """Merge a served study's planner tuples into the manifest
         (idempotent; crash-safe via atomic rename).  Returns the number of
         new entries."""
-        return self.record_entries(study_warm_entries(study))
+        return self.record_entries(study_warm_entries(study, devices))
 
     def record_entries(self, new_entries: list[dict]) -> int:
         """Merge compile-key entry rows into the manifest — the shared
@@ -261,14 +220,27 @@ class WarmCache:
         """Replay manifest entries through the engine's own sweep functions
         so the in-process jit caches hold every recorded compile key (XLA
         compiles hit the persistent disk cache when enabled).  Returns the
-        number of dispatches replayed."""
+        number of dispatches replayed.
+
+        Entries recorded on a wider mesh than this host has (``devices`` >
+        visible devices — a manifest carried over from a bigger machine)
+        are *skipped*, counted in :attr:`skipped_entries`: live traffic
+        rebuilds its own compile keys at this host's routing, which is the
+        correct warm state here — a replay must never wedge the restart."""
+        avail = _mesh.available_devices()
+        replayed = 0
         for e in entries:
+            d = int(e.get("devices", 1))
+            if d > avail:
+                self.skipped_entries += 1
+                continue
             stt, shw, scfg = dummy_stacked(e)
             m = e["mechanism"]
-            fn = _engine._sweep_fn(m)
+            fn = _engine._sweep_fn_mesh(m, d)
             acc = fn(stt, shw, scfg) if m == "lazypim" else fn(stt, shw)
             jax.block_until_ready(acc)
-        return len(entries)
+            replayed += 1
+        return replayed
 
     def warm_from_manifest(self) -> int:
         return self.warm(self.load_manifest())

@@ -209,14 +209,55 @@ def _sweep_fn(mechanism: str):
     return jax.jit(jax.vmap(ACC_FNS[mechanism], in_axes=(0, 0)))
 
 
+# Device counts > 1 whose mesh sweep variants have been built in this
+# process.  NOT cleared with the jit caches: ``sweep_cache_sizes`` must keep
+# counting a variant's compiles across ``_sweep_fn_sharded.cache_clear()``
+# (re-creating an entry costs nothing and reads as size 0, same as
+# ``_sweep_fn``).  Device counts are fixed per process, so every recorded
+# count stays constructible.
+_MESH_DEVICE_COUNTS: set[int] = set()
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_fn_sharded(mechanism: str, devices: int):
+    """One jitted, shard_map-over-lanes-wrapped vmapped window-scan per
+    (mechanism, device count) — the mesh sibling of :func:`_sweep_fn`,
+    with its own jit cache: one compile key space per device count, which
+    is exactly what ``Study.plan(devices=...)`` predicts."""
+    from repro.sim.mesh import shard_lanes
+
+    _MESH_DEVICE_COUNTS.add(devices)
+    if mechanism == "lazypim":
+        vm = jax.vmap(_lazypim_acc, in_axes=(0, 0, 0))
+    else:
+        vm = jax.vmap(ACC_FNS[mechanism], in_axes=(0, 0))
+    return jax.jit(shard_lanes(vm, devices))
+
+
+def _sweep_fn_mesh(mechanism: str, devices: int = 1):
+    """The dispatch-function selector every mesh-aware caller goes
+    through.  ``devices <= 1`` delegates to :func:`_sweep_fn` — THE
+    current single-device function object, not a cached snapshot, so the
+    byte-identical fallback also respects ``_sweep_fn.cache_clear()``
+    (the tests' process-death simulation).  ``devices > 1`` returns the
+    cached sharded variant."""
+    if devices <= 1:
+        return _sweep_fn(mechanism)
+    return _sweep_fn_sharded(mechanism, devices)
+
+
 def sweep_cache_sizes(mechanisms: tuple[str, ...] = MECHANISMS) -> dict[str, int]:
     """Measured XLA compile count per mechanism's sweep function (0 if the
-    sweep function has never run).  Every batched engine — ``run_sweep``,
-    ``run_batch``, the ``Study`` planner — executes through the same
-    functions, so the delta of these counts across a run is that run's
-    measured compile cost (cross-checked against ``Study.plan()`` by
-    ``benchmarks/check_budget.py --live``)."""
-    return {m: _sweep_fn(m)._cache_size() for m in mechanisms}
+    sweep function has never run), summed over the single-device function
+    and every mesh variant built in this process.  Every batched engine —
+    ``run_sweep``, ``run_batch``, the ``Study`` planner, sharded or not —
+    executes through these functions, so the delta of these counts across a
+    run is that run's measured compile cost (cross-checked against
+    ``Study.plan()`` by ``benchmarks/check_budget.py --live``)."""
+    return {m: _sweep_fn(m)._cache_size()
+            + sum(_sweep_fn_sharded(m, d)._cache_size()
+                  for d in sorted(_MESH_DEVICE_COUNTS))
+            for m in mechanisms}
 
 
 def sequential_cache_sizes(
@@ -240,6 +281,7 @@ def _sweep_accs(
     mechanisms: tuple[str, ...],
     scfg: LazyPIMConfig,
     boundary=None,
+    devices: int = 1,
 ) -> dict[str, dict]:
     """Dispatch one stacked execution per mechanism; return host-side
     accumulator dicts with a leading point axis.  THE shared dispatch of
@@ -254,10 +296,15 @@ def _sweep_accs(
     it can time out, retry, or abort a dispatch, never alter numbers.  The
     serve layer (:mod:`repro.serve`) threads deadline checks, heartbeats and
     fault injection through here.
+
+    ``devices`` selects the mesh variant: the stacked lane axis shards over
+    a ``devices``-wide lane mesh (the lane count must already be a multiple
+    of ``devices`` — the planner pads with :func:`repro.sim.prep.dummy_trace`
+    lanes).  ``devices=1`` is the byte-identical single-device path.
     """
     out = {}
     for m in mechanisms:
-        fn = _sweep_fn(m)
+        fn = _sweep_fn_mesh(m, devices)
 
         def thunk(m=m, fn=fn):
             acc = fn(stt, shw, scfg) if m == "lazypim" else fn(stt, shw)

@@ -707,6 +707,73 @@ def neutral_trace(tt: TraceTensors) -> TraceTensors:
     return dataclasses.replace(tt, name="", threads=0)
 
 
+def dummy_trace(spec: SignatureSpec, *, num_lines: int, num_windows: int,
+                num_kernels: int, pim_read_slots: int, pim_write_slots: int,
+                cpu_read_slots: int, cpu_write_slots: int) -> TraceTensors:
+    """An all-sentinel trace at an exact bucket geometry: no valid access
+    slots, every window invalid — each mechanism scan passes its carry
+    straight through, so the lane computes (and can contribute) nothing.
+    Three consumers share it: the serve layer's warm replay (same compile
+    key as real traffic, near-zero work), the cross-request coalescer's
+    masked pad lanes (:mod:`repro.serve.coalesce`), and the mesh planner's
+    lane padding up to a device-count multiple
+    (:func:`repro.sim.mesh.mesh_lane_width`).  The per-line tables are the
+    real H3 positions those line ids hash to — identical to what
+    ``pad_trace`` would produce — so the static spec metadata matches
+    byte-for-byte."""
+    n, w, k = num_lines, num_windows, num_kernels
+
+    def slots(width):
+        return jnp.full((w, width), -1, jnp.int32)
+
+    def valid(width):
+        return jnp.zeros((w, width), jnp.bool_)
+
+    return TraceTensors(
+        name="", threads=0,  # pre-neutralized: same key as neutral_trace
+        num_lines=n, num_windows=w, num_kernels=k, spec=spec,
+        line_pos=hash_positions(
+            spec, jnp.arange(n, dtype=jnp.uint32)).astype(jnp.int32),
+        line_reg=jnp.arange(n, dtype=jnp.int32) % CPUWS_REGS,
+        pim_reads=slots(pim_read_slots),
+        pim_writes=slots(pim_write_slots),
+        cpu_reads=slots(cpu_read_slots),
+        cpu_writes=slots(cpu_write_slots),
+        pim_r_valid=valid(pim_read_slots),
+        pim_w_valid=valid(pim_write_slots),
+        cpu_r_valid=valid(cpu_read_slots),
+        cpu_w_valid=valid(cpu_write_slots),
+        kernel_id=jnp.zeros((w,), jnp.int32),
+        kernel_start=jnp.zeros((w,), jnp.bool_),
+        kernel_end=jnp.zeros((w,), jnp.bool_),
+        pre_writes=jnp.zeros((k, n), jnp.bool_),
+        pre_writes_words=jnp.zeros((k, packed_words(n)), jnp.uint32),
+        pim_instr=jnp.zeros((w,), jnp.float32),
+        cpu_instr=jnp.zeros((w,), jnp.float32),
+        cpu_priv=jnp.zeros((w,), jnp.float32),
+        cpu_priv_miss_rate=jnp.zeros((), jnp.float32),
+        cpu_reuse=jnp.zeros((), jnp.float32),
+        pim_uniq_r=jnp.zeros((w,), jnp.float32),
+        pim_uniq_w=jnp.zeros((w,), jnp.float32),
+        pim_uniq=jnp.zeros((w,), jnp.float32),
+        window_valid=jnp.zeros((w,), jnp.bool_),
+    )
+
+
+def dummy_lane_triple(spec: SignatureSpec, shape: dict[str, int],
+                      lazy_static: dict | None = None):
+    """One (trace, hw, lazy) pad-lane triple at a bucket ``shape`` (the
+    ``pad_trace`` kwargs): the all-sentinel :func:`dummy_trace`, default
+    ``HWParams``, and a default lazy config carrying the group's static
+    flags (static flags are compile-key context and must match the real
+    lanes they pad).  The shared pad-lane recipe of the coalescer's
+    blessed-width padding and the mesh planner's lane padding."""
+    from repro.core.coherence import LazyPIMConfig
+
+    return (dummy_trace(spec, **shape), HWParams(),
+            LazyPIMConfig(**(lazy_static or {})))
+
+
 # ---------------------------------------------------------------------------
 # Geometry-bucketed padding (the fleet batch engine's prep layer)
 # ---------------------------------------------------------------------------

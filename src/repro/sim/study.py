@@ -64,8 +64,10 @@ from repro.core.coherence import LazyPIMConfig
 from repro.core.mechanisms import SimResult, finalize_result
 from repro.core.signatures import SignatureSpec
 from repro.sim import engine as _engine
+from repro.sim import mesh as _mesh
 from repro.sim.costmodel import HWParams
-from repro.sim.prep import TraceTensors, bucket_shapes, pad_trace, prepare
+from repro.sim.prep import (TraceTensors, bucket_shapes, dummy_lane_triple,
+                            pad_trace, prepare)
 from repro.sim.trace import ALL_APPS, GRAPH_INPUTS, make_trace
 
 __all__ = [
@@ -102,6 +104,7 @@ class Dispatch:
     lanes: int = 1                   # stacked lanes in this dispatch
     bucket_lines: int | None = None  # batch only: the bucket's line bound
     workload: str | None = None      # sequential only: the point's workload
+    devices: int = 1                 # lane-mesh size this dispatch shards over
 
 
 # ---------------------------------------------------------------------------
@@ -401,6 +404,7 @@ class StudyPlan:
     buckets: tuple[dict, ...]
     mechanisms: tuple[str, ...]
     num_points: int
+    devices: int = 1
 
     @property
     def num_buckets(self) -> int:
@@ -409,8 +413,11 @@ class StudyPlan:
     @property
     def compiles_per_mechanism(self) -> dict[str, int]:
         """Predicted *cold-cache* compile count per mechanism: one per
-        geometry bucket.  Warm jit caches can only lower the measured
-        number (``engine.sweep_cache_sizes`` deltas)."""
+        geometry bucket — independent of the device count, because each
+        bucket compiles exactly once at its routed mesh size (the per-bucket
+        ``devices`` entry) and ``engine.sweep_cache_sizes`` sums the
+        single-device function with every mesh variant.  Warm jit caches can
+        only lower the measured number (the cache-size deltas)."""
         return {m: self.num_buckets for m in self.mechanisms}
 
     @property
@@ -421,11 +428,16 @@ class StudyPlan:
         lines = [f"{self.num_points} points x {len(self.mechanisms)} "
                  f"mechanisms in {self.num_buckets} geometry buckets "
                  f"(<= {self.total_compiles} XLA compiles)"]
+        if self.devices > 1:
+            lines[0] += f", lane mesh over {self.devices} devices"
         for b in self.buckets:
             lines.append(
                 f"  bucket {b['num_lines']} lines x {b['num_windows']} "
                 f"windows: {b['lanes']} lanes over {len(b['workloads'])} "
                 f"workloads, pad overhead {b['line_pad_overhead']:.2f}x")
+            if b.get("devices", 1) > 1:
+                lines[-1] += (f", sharded {b['padded_lanes']} lanes / "
+                              f"{b['devices']} devices")
         return "\n".join(lines)
 
 
@@ -546,26 +558,39 @@ class Study:
 
     # -- planning -----------------------------------------------------------
 
-    def plan(self) -> StudyPlan:
+    def plan(self, devices: int | None = None) -> StudyPlan:
         """Predict the execution shape — geometry buckets, lane counts, and
-        the compile budget — without dispatching anything."""
+        the compile budget — without dispatching anything.
+
+        ``devices`` is the lane-mesh width :meth:`run` will shard over
+        (``None`` = every visible device, matching ``run``'s default); each
+        bucket routes to the largest pow2 device subset its lane count
+        fills (the bucket's ``devices`` entry) and pads its lane axis up to
+        ``padded_lanes``, the next mesh multiple.  The compile budget is
+        device-count-independent — one compile per (mechanism, bucket),
+        whichever mesh variant it lands in — so ``check_budget --live``
+        asserts the same prediction at any simulated device count."""
         tts = self.traces()
         lanes = self._lanes()
+        resolved = _mesh.resolve_devices(devices)
         buckets = []
         for idx, shape in bucket_shapes(tts):
             members = set(idx)
             sel = [lane for lane in lanes if lane[0] in members]
             real = sum(tts[w].num_lines for w, _, _ in sel)
+            d = _mesh.devices_for(len(sel), resolved) if sel else 1
             buckets.append(dict(
                 num_lines=shape["num_lines"],
                 num_windows=shape["num_windows"],
                 num_kernels=shape["num_kernels"],
                 workloads=[tts[i].name for i in idx],
                 lanes=len(sel),
+                devices=d,
+                padded_lanes=_mesh.mesh_lane_width(len(sel), d) if sel else 0,
                 line_pad_overhead=shape["num_lines"] * len(sel) / max(real, 1),
             ))
         return StudyPlan(buckets=tuple(buckets), mechanisms=self.mechanisms,
-                         num_points=len(lanes))
+                         num_points=len(lanes), devices=resolved)
 
     # -- lane materialization ------------------------------------------------
 
@@ -628,7 +653,8 @@ class Study:
 
     # -- execution ----------------------------------------------------------
 
-    def run(self, engine: str = "batch", on_dispatch=None) -> ResultSet:
+    def run(self, engine: str = "batch", on_dispatch=None,
+            devices: int | None = None) -> ResultSet:
         """Execute the study.
 
         ``engine="batch"`` (default) runs the planner: bucket, pad, fold
@@ -637,6 +663,17 @@ class Study:
         through the per-trace reference path (``repro.sim.engine.run_all``)
         — bit-exact with the planner on every field, and the differential
         anchor the cross-engine tests compare against.
+
+        ``devices`` shards each bucket's stacked lane axis over a lane mesh
+        (``None`` = every visible device; on a 1-device host that is the
+        byte-identical single-device path).  Buckets route per
+        :meth:`plan`: largest pow2 device subset their lanes fill, lane
+        axis padded to the mesh multiple with all-sentinel masked lanes
+        that contribute nothing.  Sharded results are bit-exact with
+        ``devices=1`` on every ``SimResult`` field
+        (``tests/test_mesh_dispatch.py``).  Batch engine only —
+        ``engine="sequential"`` with ``devices > 1`` is a ``ValueError``
+        (the sequential path is the single-device reference).
 
         ``on_dispatch`` is an optional per-dispatch boundary, called as
         ``on_dispatch(dispatch_info, thunk)`` once per compiled-scan
@@ -649,8 +686,13 @@ class Study:
         error capture and fault injection.
         """
         if engine == "batch":
-            return self._run_batched(on_dispatch)
+            return self._run_batched(on_dispatch, devices=devices)
         if engine == "sequential":
+            if devices is not None and int(devices) != 1:
+                raise ValueError(
+                    f"engine='sequential' is the single-device reference "
+                    f"path; devices={devices} only applies to "
+                    f"engine='batch'")
             return self._run_sequential(on_dispatch)
         raise ValueError(f"unknown engine {engine!r} "
                          f"(want 'batch' or 'sequential')")
@@ -674,21 +716,40 @@ class Study:
                                      results=res))
         return ResultSet(points, self.mechanisms)
 
-    def _run_batched(self, on_dispatch=None) -> ResultSet:
+    def _run_batched(self, on_dispatch=None,
+                     devices: int | None = None) -> ResultSet:
         tts, lanes = self.traces(), self._lanes()
+        resolved = _mesh.resolve_devices(devices)
         points: list[StudyPoint | None] = [None] * len(lanes)
         for bl in self.bucket_lanes():
-            stacked = _engine.neutral_trace(_engine.stack_traces(bl.traces))
-            shw = _engine.stack_hw(bl.hws)
-            scfg = _engine.stack_lazy(bl.lazys)
+            n = len(bl.traces)
+            d = _mesh.devices_for(n, resolved)
+            width = _mesh.mesh_lane_width(n, d)
+            traces, hws, lazys = bl.traces, bl.hws, bl.lazys
+            if width > n:
+                # Mesh pad lanes: all-sentinel masked traces (zero
+                # contribution) carrying the study's static lazy flags so
+                # they ride the same compiled dataflow.  Appended past
+                # lane_points, so the result loop below never reads them.
+                static = {f: getattr(self._lazys[0], f)
+                          for f in _engine._LAZY_STATIC_FIELDS}
+                pads = [dummy_lane_triple(traces[0].spec, bl.shape, static)
+                        for _ in range(width - n)]
+                traces = traces + [p[0] for p in pads]
+                hws = hws + [p[1] for p in pads]
+                lazys = lazys + [p[2] for p in pads]
+            stacked = _engine.neutral_trace(_engine.stack_traces(traces))
+            shw = _engine.stack_hw(hws)
+            scfg = _engine.stack_lazy(lazys)
             boundary = None
             if on_dispatch is not None:
-                def boundary(m, thunk, _shape=bl.shape, _n=len(bl.traces)):
+                def boundary(m, thunk, _shape=bl.shape, _n=n, _d=d):
                     return on_dispatch(
                         Dispatch(engine="batch", mechanism=m, lanes=_n,
-                                 bucket_lines=_shape["num_lines"]), thunk)
+                                 bucket_lines=_shape["num_lines"],
+                                 devices=_d), thunk)
             accs = _engine._sweep_accs(stacked, shw, self.mechanisms, scfg,
-                                       boundary=boundary)
+                                       boundary=boundary, devices=d)
             for pos, j in enumerate(bl.lane_points):
                 w = lanes[j][0]
                 res = {m: finalize_result(tts[w].name, m,

@@ -24,6 +24,7 @@ from repro.serve import (
     BoundedQueue,
     ChaosConfig,
     ChaosMonkey,
+    InjectedEngineError,
     ServeConfig,
     StudyServer,
     VirtualClock,
@@ -260,6 +261,58 @@ def test_poison_result_nan_is_lane_attributed():
     assert statuses[2] == QUARANTINED
     assert all(s == OK for rid, s in statuses.items() if rid != 2)
     assert list(srv.quarantine) == [2]
+
+
+class _SlowFaultMonkey(ChaosMonkey):
+    """poison_lane faults that burn virtual wall before dying — the cost a
+    real clock sees when a poisoned engine execution fails partway in,
+    multiplied across every bisection sub-dispatch containing the poison."""
+
+    def __init__(self, cfg, clock, fault_wall_s):
+        super().__init__(cfg, clock=clock)
+        self.fault_wall_s = fault_wall_s
+
+    def on_coalesced_dispatch(self, rids, dispatch):
+        try:
+            super().on_coalesced_dispatch(rids, dispatch)
+        except InjectedEngineError:
+            self.clock.advance(self.fault_wall_s)
+            raise
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_healthy_request_admitted_after_poison_storm(seed):
+    # Regression: the admission estimator's service-time EMA must not be
+    # poisoned by quarantine/bisection incidents.  The pre-fix step() gate
+    # excluded only TIMEOUT/CRASHED, so a quarantine-bearing step fed its
+    # fault-handling wall (here 900 s per failed bisection sub-dispatch)
+    # into the EMA — inflating it past any default deadline and shedding
+    # every later healthy request as overload, permanently: a shed request
+    # never runs, so nothing ever corrects the estimate back down.
+    clock = VirtualClock()
+    monkey = _SlowFaultMonkey(
+        ChaosConfig(seed=seed, fault_rate=0.25, classes=("poison_lane",)),
+        clock, fault_wall_s=900.0)
+    srv = StudyServer(ServeConfig(coalesce=True, audit_fraction=1.0,
+                                  seed=seed),
+                      clock=clock, chaos=monkey)
+    for _ in range(8):
+        srv.submit(SPEC_A, deadline_s=1e9)
+    out = srv.drain()
+    assert any(r.status == QUARANTINED for r in out)  # a real storm
+    # A healthy follow-up at the DEFAULT deadline (300 s << the storm's
+    # accumulated bisection wall) must be admitted and served.
+    monkey.exempt.add(8)
+    rid = srv.submit(SPEC_A)
+    assert isinstance(rid, int), f"healthy follow-up shed: {rid}"
+    (resp,) = srv.drain()
+    assert resp.status == OK
+    # ...and the now-observed healthy service time keeps admitting.
+    monkey.exempt.add(9)
+    rid2 = srv.submit(SPEC_A)
+    assert isinstance(rid2, int), f"second follow-up shed: {rid2}"
+    (resp2,) = srv.drain()
+    assert resp2.status == OK
 
 
 # -- blessed widths: warm manifest + compile-key reuse -----------------------

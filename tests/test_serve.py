@@ -106,6 +106,26 @@ def test_retry_policy_rejects_zero_attempts():
 # -- admission ---------------------------------------------------------------
 
 
+def test_service_ema_zero_observation_decays_instead_of_reseeding():
+    # Regression: the estimator's "unset" sentinel used to be == 0.0, so a
+    # legitimate zero-duration observation (exactly what a virtual clock
+    # produces for an instant dispatch) put the EMA back into the "never
+    # observed" state and the NEXT sample hard-reset it instead of
+    # decaying — one slow step after a fast one re-seeded the estimate to
+    # the full slow value.  Unset is now None; 0.0 is data.
+    srv = StudyServer(ServeConfig(), clock=VirtualClock())
+    assert srv._service_ema is None       # never observed
+    srv._observe_service(10.0)
+    assert srv._service_ema == 10.0       # first sample seeds
+    srv._observe_service(0.0)
+    assert srv._service_ema == pytest.approx(8.0)   # 0.8*10 + 0.2*0
+    srv2 = StudyServer(ServeConfig(), clock=VirtualClock())
+    srv2._observe_service(0.0)
+    assert srv2._service_ema == 0.0       # a real observation, not "unset"
+    srv2._observe_service(10.0)
+    assert srv2._service_ema == pytest.approx(2.0)  # decays, no hard reset
+
+
 def test_malformed_spec_rejected_with_naming_error():
     srv = _server()
     resp = srv.submit({"workloads": ["not-a-real-app"]})
