@@ -24,6 +24,11 @@ Two legs, one ``BENCH_serve.json`` record:
   blessed-width compile count, and the steady-state scan-compile delta,
   which must be **zero** — blessed widths are the proof coalescing
   cannot explode the compile-key space.
+* **policy** — the adaptive coalescing policy (``ServeConfig(
+  adaptive=True)``) vs the greedy coalescer: depth-1 p50 latency must not
+  regress (no backlog -> no formation hold), depth-16 throughput must
+  keep the >= 2x gate (deep queues form immediately), and the
+  steady-state scan-compile delta with the policy on must be **zero**.
 """
 
 from __future__ import annotations
@@ -178,6 +183,89 @@ def bench_coalesce() -> dict:
     }
 
 
+def bench_policy() -> dict:
+    """The adaptive-policy claim, measured: at depth 1 the policy adds no
+    latency over the greedy coalescer (no backlog -> no hold, same
+    dispatch); at depth 16 it keeps the greedy deep-queue path and its
+    >= 2x throughput gate (zero formation holds); and it mints zero new
+    scan compile keys at steady state — blessed widths stay the only jit
+    key space with the policy on."""
+    spec = COALESCE_SPECS[0]
+
+    def serve_one(srv):
+        rid = srv.submit(spec)
+        assert isinstance(rid, int), "admission rejected"
+        t0 = time.perf_counter()
+        (r,) = srv.drain()
+        assert r.status == "ok", r.status
+        return time.perf_counter() - t0
+
+    greedy = StudyServer(ServeConfig(default_deadline_s=3600.0,
+                                     max_queue=COALESCE_N, coalesce=True,
+                                     audit_fraction=0.0))
+    adaptive = StudyServer(ServeConfig(default_deadline_s=3600.0,
+                                       max_queue=COALESCE_N, coalesce=True,
+                                       adaptive=True, audit_fraction=0.0))
+    for srv in (greedy, adaptive):  # warm compile keys + resident studies
+        for _ in range(5):
+            serve_one(srv)
+
+    # Depth-1 latency, fairly interleaved: alternate the servers within
+    # each round so clock drift hits both; min-of-round-medians beats the
+    # single-core jitter.
+    g_p50s, a_p50s = [], []
+    for _ in range(REPEATS):
+        g_lat, a_lat = [], []
+        for _ in range(20):
+            g_lat.append(serve_one(greedy))
+            a_lat.append(serve_one(adaptive))
+        g_p50s.append(float(np.median(g_lat)))
+        a_p50s.append(float(np.median(a_lat)))
+
+    # Depth-16 throughput: deep queues must form immediately (the PR-7
+    # path), so the adaptive leg re-earns the >= 2x coalescing gate.
+    specs = [COALESCE_SPECS[i % len(COALESCE_SPECS)]
+             for i in range(COALESCE_N)]
+
+    def run_pass(srv):
+        rids = [srv.submit(s) for s in specs]
+        assert all(isinstance(r, int) for r in rids), "admission rejected"
+        t0 = time.perf_counter()
+        out = srv.drain()
+        wall = time.perf_counter() - t0
+        assert len(out) == COALESCE_N
+        assert all(r.status == "ok" for r in out), \
+            {r.rid: r.status for r in out if r.status != "ok"}
+        return wall
+
+    solo = StudyServer(ServeConfig(default_deadline_s=3600.0,
+                                   max_queue=COALESCE_N))
+    run_pass(solo)  # warm the 1-lane compile keys + resident studies
+    solo_s = min(run_pass(solo) for _ in range(REPEATS))
+
+    run_pass(adaptive)  # warm the wide blessed widths (one-time cost)
+    base = dict(_engine.sweep_cache_sizes())
+    holds0 = int(adaptive.stats["formation_holds"])
+    adapt_s = min(run_pass(adaptive) for _ in range(REPEATS))
+    after = dict(_engine.sweep_cache_sizes())
+    new_compiles = sum(after.values()) - sum(base.values())
+    assert new_compiles == 0, \
+        f"adaptive steady state recompiled {new_compiles} scans"
+    holds = int(adaptive.stats["formation_holds"]) - holds0
+    assert holds == 0, f"depth-16 passes held for formation {holds}x"
+    return {
+        "depth1_p50_greedy_s": round(min(g_p50s), 6),
+        "depth1_p50_adaptive_s": round(min(a_p50s), 6),
+        "depth16_one_at_a_time_studies_per_s":
+            round(COALESCE_N / solo_s, 3),
+        "depth16_adaptive_studies_per_s": round(COALESCE_N / adapt_s, 3),
+        "adaptive_speedup": round(solo_s / adapt_s, 3),
+        "formation_holds_at_depth16": holds,
+        "new_scan_compiles_at_steady_state": int(new_compiles),
+        "telemetry": adaptive.telemetry.summary(),
+    }
+
+
 def bench_warm_restart() -> dict:
     from benchmarks.fig7_speedup import study as fig7_study
 
@@ -235,8 +323,17 @@ def main() -> None:
           f"({coalesce['speedup']:.2f}x), "
           f"{coalesce['blessed_width_compiles']} blessed-width compiles, "
           f"{coalesce['new_scan_compiles_at_steady_state']} at steady state")
+    policy = bench_policy()
+    print(f"policy: depth-1 p50 greedy "
+          f"{policy['depth1_p50_greedy_s'] * 1e3:.1f} ms vs adaptive "
+          f"{policy['depth1_p50_adaptive_s'] * 1e3:.1f} ms, depth-16 "
+          f"{policy['depth16_adaptive_studies_per_s']:.1f} studies/s "
+          f"({policy['adaptive_speedup']:.2f}x), "
+          f"{policy['formation_holds_at_depth16']} deep-queue holds, "
+          f"{policy['new_scan_compiles_at_steady_state']} new compiles")
     path = write_bench_json("serve", {"storm": storm, "warm_restart": warm,
-                                      "coalesce": coalesce})
+                                      "coalesce": coalesce,
+                                      "policy": policy})
     print(f"wrote {path}")
 
 

@@ -25,7 +25,10 @@ The committed ``BENCH_serve.json`` is gated alongside it: a post-crash warm
 restart of the serve layer must show zero new scan compiles
 (:func:`check_serve`), and the cross-request coalescing leg must show
 >= 2x studies/sec at queue depth >= 8 with zero steady-state scan compiles
-beyond the blessed-width budget (:func:`check_coalesce`).  The engine
+beyond the blessed-width budget (:func:`check_coalesce`), and the adaptive
+coalescing policy must be latency-free at depth 1, keep the >= 2x
+deep-queue gate, and mint zero new compile keys (:func:`check_policy`).
+The engine
 record's ``mesh_scaling`` section is gated too (:func:`check_mesh`): the
 4-simulated-device leg must be present with plan == measured compiles and
 real throughput at every device count.
@@ -183,6 +186,56 @@ def check_coalesce(record: dict, path: pathlib.Path) -> int:
     if blessed > FLEET_COMPILE_BUDGET:
         print(f"check_budget: blessed-width warm-up cost {blessed} compiles "
               f"> fleet budget {FLEET_COMPILE_BUDGET}", file=sys.stderr)
+        return 1
+    return check_policy(record, path)
+
+
+def check_policy(record: dict, path: pathlib.Path) -> int:
+    """Gate the adaptive-policy leg of the serve record: the policy must be
+    free when it cannot help (depth-1 p50 no worse than the greedy
+    coalescer — no backlog means no formation hold), must keep the greedy
+    deep-queue path and its >= 2x throughput gate at depth 16, and must
+    mint ZERO new scan compile keys at steady state — slack-driven width
+    selection chooses *among* the blessed widths, never beside them."""
+    pol = record.get("policy")
+    if not pol:
+        print(f"check_budget: no policy section in {path} — regenerate "
+              f"with `python -m benchmarks.run --bench serve`",
+              file=sys.stderr)
+        return 1
+    g_p50 = pol["depth1_p50_greedy_s"]
+    a_p50 = pol["depth1_p50_adaptive_s"]
+    speedup = pol["adaptive_speedup"]
+    steady = pol["new_scan_compiles_at_steady_state"]
+    holds = pol["formation_holds_at_depth16"]
+    print(f"check_budget: serve policy: depth-1 p50 greedy {g_p50 * 1e3:.1f}"
+          f" ms vs adaptive {a_p50 * 1e3:.1f} ms, depth-16 "
+          f"{pol['depth16_adaptive_studies_per_s']} studies/s "
+          f"({speedup}x), {holds} deep-queue holds, {steady} steady-state "
+          f"compiles (budget: adaptive p50 <= greedy within the 2% timer "
+          f"band, >= 2.0x, 0 holds, 0 compiles)")
+    # 2% band = the reference container's run-to-run median jitter on a
+    # ~8 ms serve (the sign of a ~20 us gap flips between bench runs); a
+    # real formation-hold tax at depth 1 would cost the full
+    # formation_window_s (20 ms default, +250%) and cannot hide in it.
+    if a_p50 > g_p50 * 1.02:
+        print(f"check_budget: adaptive depth-1 p50 {a_p50}s > greedy "
+              f"{g_p50}s + 2% noise band — the policy taxes the "
+              f"no-backlog path it must leave alone", file=sys.stderr)
+        return 1
+    if speedup < 2.0:
+        print(f"check_budget: adaptive depth-16 speedup {speedup}x < 2.0x "
+              f"— the policy lost the deep-queue coalescing gate",
+              file=sys.stderr)
+        return 1
+    if holds != 0:
+        print(f"check_budget: adaptive policy held {holds}x at depth 16 — "
+              f"deep queues must form immediately", file=sys.stderr)
+        return 1
+    if steady != 0:
+        print(f"check_budget: adaptive steady state COMPILED {steady} new "
+              f"scans — width selection left the blessed-width key space",
+              file=sys.stderr)
         return 1
     return 0
 

@@ -145,7 +145,9 @@ def serve_study(args) -> list:
         specs = [specs]
     cfg = ServeConfig(default_deadline_s=args.deadline_s,
                       max_queue=args.max_queue, cache_dir=args.cache_dir,
-                      seed=args.seed, coalesce=args.coalesce)
+                      seed=args.seed,
+                      coalesce=args.coalesce or args.adaptive,
+                      adaptive=args.adaptive)
     chaos = None
     if args.chaos_rate > 0:
         chaos = ChaosMonkey(ChaosConfig(seed=args.seed,
@@ -174,6 +176,10 @@ def serve_study(args) -> list:
     for r in final.values():
         counts[r.status] = counts.get(r.status, 0) + 1
     print(f"served {len(final)} requests: {counts}")
+    if cfg.adaptive:
+        t = server.telemetry.summary()
+        print(f"policy: formation_holds={t['formation_holds']} "
+              f"decisions={t['decisions']}")
     return [final[rid] for rid in sorted(final)]
 
 
@@ -200,6 +206,11 @@ def main():
                     help="coalesce compatible queued studies into shared "
                          "blessed-width batched dispatches (bit-exact; "
                          "poison requests are bisected out and quarantined)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="adaptive coalescing policy (implies --coalesce): "
+                         "slack-aware formation window under light load, "
+                         "slack-driven batch width, repeat-offender group "
+                         "keys routed to the sequential reference")
     args = ap.parse_args()
     if args.study:
         serve_study(args)

@@ -30,6 +30,12 @@ from repro.serve.coalesce import (
     group_warm_entries,
     stack_group,
 )
+from repro.serve.policy import (
+    AdaptivePolicy,
+    PolicyConfig,
+    ServiceModel,
+    Telemetry,
+)
 from repro.serve.queueing import BoundedQueue
 from repro.serve.request import (
     CRASHED,
@@ -81,6 +87,10 @@ __all__ = [
     "group_key",
     "group_warm_entries",
     "stack_group",
+    "AdaptivePolicy",
+    "PolicyConfig",
+    "ServiceModel",
+    "Telemetry",
     "BoundedQueue",
     "CRASHED",
     "FAILED",

@@ -70,6 +70,7 @@ _SALT_FAULTED = np.uint32(1)
 _SALT_CLASS = np.uint32(2)
 _SALT_TRANSIENT = np.uint32(3)
 _SALT_VARIANT = np.uint32(4)
+_SALT_BURST = np.uint32(5)
 
 
 class InjectedEngineError(RuntimeError):
@@ -139,6 +140,20 @@ class ChaosMonkey:
     def variant(self, rid: int, n: int) -> int:
         """Deterministic sub-variant index in [0, n) (spec corruption)."""
         return min(int(self._u01(rid, _SALT_VARIANT) * n), n - 1)
+
+    def burst(self, tick: int, max_n: int) -> int:
+        """Deterministic arrival-burst size in [0, max_n] for interleaved
+        storm drivers: how many submissions land before cooperative step
+        ``tick`` runs.  Storms the adaptive policy's *formation window* —
+        bursts arriving mid-hold join the held group, empty bursts force
+        the hold to wait out its window — from the same seeded stream as
+        every other chaos decision, so one seed replays one exact
+        arrival interleaving.  A fresh salt lane: the legacy per-request
+        draws (fault class, variant, ...) are untouched, so committed
+        storms stay bit-identical."""
+        if max_n < 0:
+            raise ValueError(f"burst needs max_n >= 0, got {max_n}")
+        return min(int(self._u01(tick, _SALT_BURST) * (max_n + 1)), max_n)
 
     # -- admission-class injection (storm generation) -----------------------
 

@@ -191,19 +191,26 @@ _AUDIT_SALT = np.uint32(0xAD17)
 
 def audit_sample(seed: int, tag: int, lanes: int, fraction: float) -> list[int]:
     """A deterministic Threefry sample of lane indices to spot-check
-    against the sequential reference: ``ceil(lanes * fraction)`` lanes (at
-    least one when ``fraction > 0``), chosen by per-lane counter-based
-    draws so one (seed, dispatch tag) replays one exact audit set on any
-    machine."""
+    against the sequential reference: ``ceil(lanes * fraction)`` lanes,
+    chosen by counter-based draws so one (seed, dispatch tag) replays one
+    exact audit set on any machine.
+
+    The sample is FLOORED AT ONE lane whenever ``fraction > 0`` and the
+    sub-batch is non-empty: a plain ``int(lanes * fraction)`` truncation
+    would round a <= 3-lane sub-batch at the default ``fraction=0.25``
+    down to *zero* audited lanes, shipping small coalesced groups (and
+    every post-bisection sub-batch) entirely unaudited — pinned by
+    ``tests/test_policy.py::test_audit_sample_floors_at_one_lane``."""
     if fraction <= 0.0 or lanes < 1:
         return []
     k = min(lanes, max(1, int(np.ceil(lanes * float(fraction)))))
     with np.errstate(over="ignore"):  # uint32 wraparound by design
-        scores = []
-        for i in range(lanes):
-            x0, _ = threefry2x32(
-                np, np.uint32(seed & 0xFFFFFFFF),
-                _AUDIT_SALT ^ np.uint32(tag & 0xFFFFFFFF),
-                np.uint32(i), _AUDIT_SALT)
-            scores.append((int(x0), i))
+        # One vectorized Threefry call over the lane counter axis —
+        # elementwise, so bit-identical to per-lane scalar draws.
+        x0, _ = threefry2x32(
+            np, np.uint32(seed & 0xFFFFFFFF),
+            _AUDIT_SALT ^ np.uint32(tag & 0xFFFFFFFF),
+            np.arange(lanes, dtype=np.uint32),
+            np.full(lanes, _AUDIT_SALT, dtype=np.uint32))
+        scores = [(int(s), i) for i, s in enumerate(np.asarray(x0))]
     return sorted(i for _, i in sorted(scores)[:k])

@@ -22,6 +22,7 @@ class BoundedQueue:
         self._q: deque = deque()
         self.shed = 0       # offers refused because the queue was full
         self.accepted = 0   # offers admitted
+        self.high_water = 0  # deepest backlog ever held (telemetry)
 
     def __len__(self) -> int:
         return len(self._q)
@@ -33,11 +34,18 @@ class BoundedQueue:
             return False
         self._q.append(item)
         self.accepted += 1
+        self.high_water = max(self.high_water, len(self._q))
         return True
 
     def pop(self):
         """Oldest admitted item, or None when idle."""
         return self._q.popleft() if self._q else None
+
+    def peek(self):
+        """Oldest admitted item without removing it, or None when idle —
+        lets a policy inspect the head (e.g. its deadline slack) before
+        committing to pop it."""
+        return self._q[0] if self._q else None
 
     def take(self, pred) -> list:
         """Remove and return every queued item matching ``pred``, oldest

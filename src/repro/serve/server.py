@@ -64,6 +64,7 @@ from repro.serve.coalesce import (
     group_warm_entries,
     stack_group,
 )
+from repro.serve.policy import AdaptivePolicy, PolicyConfig, Telemetry
 from repro.serve.queueing import BoundedQueue
 from repro.serve.request import Response, StudyRequest, build_study
 from repro.serve.retry import RetryPolicy
@@ -104,6 +105,33 @@ class ServeConfig:
     devices: int | None = None      # lane-mesh width for batched dispatches
     #                                 (None = every visible device; scarce-
     #                                 lane dispatches route to pow2 subsets)
+    # Adaptive coalescing policy (repro.serve.policy).  Off by default:
+    # greedy immediate formation at the full lane budget is the PR-7
+    # behavior the committed chaos storms and bit-exactness tests pin.
+    adaptive: bool = False
+    formation_window_s: float = 0.02  # max hold awaiting compatible peers
+    depth_threshold: int = 4          # backlog >= this: form immediately
+    offender_threshold: float = 3.0   # offense score >= this: sequential
+    offender_decay: float = 0.5       # score *= decay per clean dispatch
+
+    def __post_init__(self):
+        if self.adaptive and not self.coalesce:
+            raise ValueError(
+                "ServeConfig(adaptive=True) requires coalesce=True: the "
+                "policy decides formation, width, and offender routing "
+                "for coalesced dispatches")
+
+
+@dataclasses.dataclass
+class _HeldGroup:
+    """A coalesced group held open for formation (adaptive policy): the
+    members are already out of the queue, waiting until ``hold_until``
+    for compatible peers to arrive before dispatching."""
+
+    key: object
+    members: list
+    hold_until: float
+    budget: int
 
 
 class StudyServer:
@@ -140,6 +168,20 @@ class StudyServer:
         self._devices = _mesh.resolve_devices(self.cfg.devices)
         self._group_tag = 0      # coalesced-dispatch counter (audit stream)
         self._study_cache: dict[str, object] = {}  # spec json -> Study (LRU)
+        # Telemetry is always on (pure accumulation, no clock reads); the
+        # adaptive policy only when configured, sharing the same sink.
+        self.telemetry = Telemetry()
+        self.policy: AdaptivePolicy | None = None
+        if self.cfg.adaptive:
+            self.policy = AdaptivePolicy(
+                PolicyConfig(
+                    formation_window_s=self.cfg.formation_window_s,
+                    depth_threshold=self.cfg.depth_threshold,
+                    offender_threshold=self.cfg.offender_threshold,
+                    offender_decay=self.cfg.offender_decay),
+                telemetry=self.telemetry)
+        self._held: _HeldGroup | None = None
+        self._hold_sleep_s = 0.0  # formation wait inside the current step
         if self.warm:
             self._journal_load()
             if self.cfg.warm_on_start:
@@ -200,6 +242,16 @@ class StudyServer:
         terminal reject :class:`Response` (malformed / oversized /
         overload).  Every submission consumes one rid, rejected or not, so
         a storm's rid sequence is reproducible."""
+        # An explicit non-positive deadline is a caller bug, not a "use
+        # the default" marker (the PR-8 EMA lesson: a falsy float is
+        # never an unset sentinel — only None is).  Reject it by name
+        # before a rid is even assigned: this is API misuse, not a
+        # request outcome.
+        if deadline_s is not None and not deadline_s > 0:
+            raise ValueError(
+                f"deadline_s must be positive, got {deadline_s!r} (pass "
+                f"None for the default "
+                f"{self.cfg.default_deadline_s:.0f}s)")
         rid = self._next_rid
         self._next_rid += 1
         raw = spec if isinstance(spec, dict) else None
@@ -214,7 +266,8 @@ class StudyServer:
                 rid, _rq.REJECTED_OVERSIZED,
                 error=f"request folds to {lanes} lanes > max_lanes="
                       f"{self.cfg.max_lanes}; split the study"))
-        dl = deadline_s or self.cfg.default_deadline_s
+        dl = (self.cfg.default_deadline_s if deadline_s is None
+              else float(deadline_s))
         # Deadline accounting includes queue wait: a request predicted to
         # expire *before the worker reaches it* is shed now, as overload —
         # dispatching it late would burn worker time on a guaranteed
@@ -267,15 +320,23 @@ class StudyServer:
         """Serve the oldest queued request (None when idle or crashed).
         With ``cfg.coalesce`` the step serves the head's whole compatible
         *group* in one shared dispatch and returns the list of responses it
-        resolved; otherwise the PR-6 single-request loop, one Response."""
+        resolved; otherwise the PR-6 single-request loop, one Response.  A
+        step that *holds* a group for formation (adaptive policy) returns
+        an empty list — progress, not idleness, so ``drain`` keeps going."""
         if self.crashed:
             return None
-        req = self.queue.pop()
-        if req is None:
-            return None
-        t0 = self.clock.now()
-        out = (self._step_coalesced(req) if self.cfg.coalesce
-               else self._process(req))
+        self.telemetry.observe_depth(len(self.queue))
+        self._hold_sleep_s = 0.0
+        if self._held is not None:
+            t0 = self.clock.now()
+            out = self._continue_hold()
+        else:
+            req = self.queue.pop()
+            if req is None:
+                return None
+            t0 = self.clock.now()
+            out = (self._step_coalesced(req) if self.cfg.coalesce
+                   else self._process(req))
         resolved = out if isinstance(out, list) else [out]
         # Crash/quarantine steps don't inform the estimate: their wall is
         # fault handling (hang timeouts accumulated across bisection
@@ -283,13 +344,16 @@ class StudyServer:
         # inflates the EMA until healthy admissions shed as overload.
         # Members that timed out at group formation never consumed worker
         # time either, so they don't count toward the per-request divisor;
-        # a step that resolved ONLY timeouts observes nothing.
+        # a step that resolved ONLY timeouts observes nothing.  Formation
+        # waits (``_hold_sleep_s``) are deliberate idling, not service —
+        # they are subtracted before the EMA sees the wall.
         if not any(r.status in (_rq.CRASHED, _rq.QUARANTINED)
                    for r in resolved):
             served = [r for r in resolved if r.status != _rq.TIMEOUT]
             if served:
                 self._observe_service(
-                    (self.clock.now() - t0) / len(served))
+                    max(self.clock.now() - t0 - self._hold_sleep_s, 0.0)
+                    / len(served))
         return out
 
     def _observe_service(self, s: float):
@@ -312,6 +376,7 @@ class StudyServer:
     def _resolve(self, resp: Response) -> Response:
         self.responses[resp.rid] = resp
         self.stats[resp.status] += 1
+        self.telemetry.observe_response(resp)
         self._journal_clear(resp.rid)
         return resp
 
@@ -427,6 +492,7 @@ class StudyServer:
                         latency_s=self.clock.now() - req.submitted_at)
         self.responses[req.rid] = resp
         self.stats[_rq.CRASHED] += 1
+        self.telemetry.observe_response(resp)
         return resp
 
     # -- cross-request lane coalescing (repro.serve.coalesce) ---------------
@@ -434,7 +500,12 @@ class StudyServer:
     def _step_coalesced(self, head: StudyRequest) -> list[Response]:
         """Serve the head request's whole compatible group in one shared
         blessed-width dispatch; incompatible (multi-bucket / over-budget)
-        heads fall back to the single-request loop."""
+        heads fall back to the single-request loop.  With the adaptive
+        policy on, a chronic-offender group key routes straight to the
+        sequential reference, and a shallow-but-live backlog may *hold*
+        the freshly formed group for a formation window instead of
+        dispatching immediately (the hold returns [] and the next step
+        finishes the group)."""
         budget = min(self.cfg.max_batch_lanes, BLESSED_LANE_WIDTHS[-1])
         try:
             key = group_key(head.study)
@@ -442,12 +513,51 @@ class StudyServer:
             key = None  # synthesis failure: let _process surface it
         if key is None or head.study.num_points > budget:
             return [self._process(head)]
+        if self.policy is not None and self.policy.route_sequential(key):
+            return [self._route_offender(head, key)]
 
-        total = head.study.num_points
+        depth = len(self.queue)  # backlog behind the head: the load signal
+        members, total = self._take_compat(key, [head], budget)
+        self.stats["coalesced_groups"] += 1
+
+        if self.policy is not None:
+            now = self.clock.now()
+            window = self.policy.formation_window(
+                depth=depth, lanes=total, lane_budget=budget,
+                min_slack_s=min(r.deadline() - now for r in members))
+            if window > 0.0:
+                self.stats["formation_holds"] += 1
+                self.telemetry.formation_holds += 1
+                self._held = _HeldGroup(key=key, members=members,
+                                        hold_until=now + window,
+                                        budget=budget)
+                return []
+        return self._finish_group(key, members)
+
+    def _take_compat(self, key, members: list[StudyRequest],
+                     budget: int) -> tuple[list[StudyRequest], int]:
+        """Pull every queued request compatible with ``key`` into the
+        group, oldest first, until the lane budget fills.  With the
+        adaptive policy on, the budget is additionally capped by the
+        slack-driven blessed width: the tightest member's deadline slack
+        bounds how wide a dispatch the whole group may ride (never below
+        the lanes already committed — the members must dispatch at *some*
+        width regardless)."""
+        total = sum(r.study.num_points for r in members)
+        now = self.clock.now()
+        slack = min(r.deadline() - now for r in members)
 
         def compat(r: StudyRequest) -> bool:
-            nonlocal total
-            if total + r.study.num_points > budget:
+            nonlocal total, slack
+            cap = budget
+            r_slack = min(slack, r.deadline() - now)
+            if self.policy is not None:
+                cap = min(budget,
+                          max(self.policy.width_budget(r_slack), total))
+            if total + r.study.num_points > cap:
+                if (self.policy is not None
+                        and total + r.study.num_points <= budget):
+                    self.telemetry.decisions["width_capped"] += 1
                 return False
             try:
                 if group_key(r.study) != key:
@@ -455,13 +565,78 @@ class StudyServer:
             except Exception:
                 return False
             total += r.study.num_points
+            slack = r_slack
             return True
 
-        members = [head] + self.queue.take(compat)
-        self.stats["coalesced_groups"] += 1
+        members = members + self.queue.take(compat)
+        return members, total
 
-        # Members already past their deadline time out at group formation —
-        # stacking them would waste lanes on a guaranteed-late answer.
+    def _continue_hold(self) -> list[Response]:
+        """One step of an open formation hold: sweep the queue for peers
+        that arrived since the hold began, then either keep holding (new
+        members joined and the window + every member's slack still
+        afford it), wait out the remaining window (no arrivals — in the
+        cooperative loop nothing can join mid-sleep), or dispatch."""
+        held, self._held = self._held, None
+        before = len(held.members)
+        members, total = self._take_compat(held.key, held.members,
+                                           held.budget)
+        now = self.clock.now()
+        remaining = held.hold_until - now
+        if remaining > 0.0 and total < held.budget:
+            # A tight-slack joiner shortens the window: the hold never
+            # outlives any member's slack (minus the predicted dispatch).
+            spare = self.policy.hold_spare(
+                min(r.deadline() - now for r in members))
+            remaining = min(remaining, spare)
+            if remaining > 0.0:
+                if len(members) > before:
+                    self._held = dataclasses.replace(
+                        held, members=members,
+                        hold_until=now + remaining)
+                    return []
+                self.clock.sleep(remaining)
+                self._hold_sleep_s += remaining
+        return self._finish_group(held.key, members)
+
+    def _route_offender(self, req: StudyRequest, key) -> Response:
+        """Serve a chronic-offender group key's request directly on the
+        bit-exact sequential reference: its decayed offense score says a
+        batched dispatch ends in bisection or audit degradation anyway,
+        so skip the dance.  Clean serves decay the score
+        (``policy.record_clean``), healing the key back to batched
+        routing — this is a detour, not an exile."""
+        self.stats["offender_routed"] += 1
+        try:
+            rs = req.study.run(engine="sequential",
+                               on_dispatch=self._boundary(req, 0))
+        except DeadlineExceeded as e:
+            return self._resolve(Response(
+                req.rid, _rq.TIMEOUT, attempts=1, error=str(e),
+                latency_s=self.clock.now() - req.submitted_at))
+        except SimulatedCrash as e:
+            return self._crash(req, 0, e)
+        except Exception as e:
+            return self._resolve(Response(
+                req.rid, _rq.FAILED, attempts=1,
+                error=f"sequential (offender-routed): {e}",
+                latency_s=self.clock.now() - req.submitted_at))
+        self.policy.record_clean(key)
+        return self._resolve(Response(
+            req.rid, _rq.OK_DEGRADED, results=rs, engine="sequential",
+            attempts=1,
+            error="repeat-offender group key routed to the sequential "
+                  "reference (bit-exact)",
+            latency_s=self.clock.now() - req.submitted_at))
+
+    def _finish_group(self, key, members: list[StudyRequest]
+                      ) -> list[Response]:
+        """Dispatch a formed (possibly held) group.  Members already past
+        their deadline time out at group formation — stacking them would
+        waste lanes on a guaranteed-late answer — and their journal
+        entries clear through ``_resolve`` like any terminal response, so
+        a restart never re-answers a request that already timed out
+        between ``take`` and dispatch."""
         now = self.clock.now()
         out, live = [], []
         for r in members:
@@ -511,8 +686,15 @@ class StudyServer:
             return acc
 
         self.stats["coalesced_dispatches"] += 1
+        t_dispatch = self.clock.now()
         accs = _engine._sweep_accs(stt, shw, key.mechanisms, scfg,
                                    boundary=boundary, devices=d)
+        self.telemetry.observe_width(width)
+        if self.policy is not None:
+            # The width-indexed dispatch-wall EMA behind every slack
+            # decision (formation affordability, slack-driven width).
+            self.policy.model.observe(
+                width, self.clock.now() - t_dispatch)
         if self.chaos is not None:
             accs = self.chaos.corrupt_accs(
                 [(s.rid, s.slice) for s in slices], accs)
@@ -547,6 +729,8 @@ class StudyServer:
         except Exception as e:
             trace.append({"members": rids, "outcome": f"failed: {e}"})
             if len(members) == 1:
+                if self.policy is not None:
+                    self.policy.record_offense(key)
                 results[rids[0]] = self._quarantine(
                     members[0],
                     f"poison request isolated by bisection: every "
@@ -584,6 +768,8 @@ class StudyServer:
             try:
                 rs = r.study.points_from_lane_accs(member_accs)
             except ResultIntegrityError as e:
+                if self.policy is not None:
+                    self.policy.record_offense(key)
                 results[r.rid] = self._quarantine(
                     r, f"per-lane integrity sentinel tripped in coalesced "
                        f"dispatch (lane-exact attribution): {e}", trace)
@@ -604,6 +790,8 @@ class StudyServer:
                 break
 
         if mismatch is None:
+            if self.policy is not None and healthy:
+                self.policy.record_clean(key)
             for r, rs in healthy:
                 results[r.rid] = self._resolve(Response(
                     r.rid, _rq.OK, results=rs, engine="coalesced",
@@ -614,6 +802,8 @@ class StudyServer:
         # Audit mismatch: the answer is wrong but finite, so no lane can
         # be trusted — recompute every member on the sequential reference.
         self.stats["audit_mismatches"] += 1
+        if self.policy is not None:
+            self.policy.record_offense(key)
         trace.append({"members": [r.rid for r, _ in healthy],
                       "outcome": f"audit mismatch (rid={mismatch[0]}, "
                                  f"lane={mismatch[1]}): degrading batch "
