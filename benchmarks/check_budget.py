@@ -33,6 +33,15 @@ record's ``mesh_scaling`` section is gated too (:func:`check_mesh`): the
 4-simulated-device leg must be present with plan == measured compiles and
 real throughput at every device count.
 
+The committed ``BENCH_capture.json`` (:func:`check_capture`) gates the
+captured-workload study (``benchmarks/fig_capture.py``): all three live
+captures must be present with their mechanism orderings recorded, the
+study's ``Study.plan()`` compile prediction must equal the measured
+jit-cache delta exactly, and the total must fit the fleet budget —
+captured traces ride the same (mechanism, geometry-bucket) compile keys
+as the synthetic families, so a capture layout that leaks a ragged
+geometry shows up here as a phantom compile.
+
 Usage: python -m benchmarks.check_budget [--live] [path-to-BENCH_engine.json]
 """
 
@@ -240,6 +249,52 @@ def check_policy(record: dict, path: pathlib.Path) -> int:
     return 0
 
 
+def check_capture(path: pathlib.Path) -> int:
+    """Gate the committed capture record: the three live captures answer
+    the mechanism study with the planner's compile prediction exact and
+    the fleet within budget (captured geometries must reuse the synthetic
+    families' bucket keys, never mint their own)."""
+    try:
+        record = json.loads(path.read_text())
+    except FileNotFoundError:
+        print(f"check_budget: {path} not found — run "
+              f"`python -m benchmarks.fig_capture`", file=sys.stderr)
+        return 1
+    cap = record.get("capture")
+    if not cap:
+        print(f"check_budget: no capture section in {path}", file=sys.stderr)
+        return 1
+    expected = {"capture/kv_serve", "capture/moe_experts",
+                "capture/lazy_embed"}
+    have = set(cap.get("ordering", {}))
+    total = cap.get("total_compiles", -1)
+    n_holds = sum(v for w in expected & have
+                  for v in cap["ordering"][w].values())
+    n_flags = sum(len(cap["ordering"][w]) for w in expected & have)
+    print(f"check_budget: capture study: {len(have)} workloads, "
+          f"{n_holds}/{n_flags} paper orderings hold on live streams, "
+          f"{total} compiles, plan_matches_measured="
+          f"{cap.get('plan_matches_measured')} "
+          f"(budget {FLEET_COMPILE_BUDGET})")
+    if missing := expected - have:
+        print(f"check_budget: capture record lacks {sorted(missing)} — "
+              f"regenerate with `python -m benchmarks.fig_capture`",
+              file=sys.stderr)
+        return 1
+    if not cap.get("plan_matches_measured"):
+        print(f"check_budget: capture study plan prediction != measured "
+              f"compiles (plan {cap.get('plan_compiles_per_mechanism')} vs "
+              f"measured {cap.get('measured_compiles_per_mechanism')}) — "
+              f"a capture geometry minted its own compile key",
+              file=sys.stderr)
+        return 1
+    if total > FLEET_COMPILE_BUDGET:
+        print(f"check_budget: capture study OVER BUDGET ({total} > "
+              f"{FLEET_COMPILE_BUDGET})", file=sys.stderr)
+        return 1
+    return 0
+
+
 def check_live() -> int:
     """Predicted-vs-measured compile budget for the fig7 study, end to end.
     Must run in a fresh process (cold jit caches): the prediction is the
@@ -281,6 +336,8 @@ def main(argv: list[str]) -> int:
     rc = check_committed(path)
     if rc == 0:
         rc = check_serve(root / "BENCH_serve.json")
+    if rc == 0:
+        rc = check_capture(root / "BENCH_capture.json")
     if rc == 0 and live:
         rc = check_live()
     return rc

@@ -1,0 +1,86 @@
+"""Declared line layouts for captured workloads (the line-mapper layer).
+
+A capture adapter records *logical* index streams (row ids, page/slot
+pairs, expert ids) from live model execution; this module declares how
+those map onto 64 B cache-line ids inside one flat PIM data region — the
+same address space the synthetic families lay out by hand in
+:mod:`repro.sim.synth` (``vline``/``tline`` & co.).
+
+A :class:`LineLayout` is an ordered set of named regions (pages, page
+table, expert weights, capacity buffer, ...), each a contiguous run of
+lines.  The declared total is padded up to :func:`repro.sim.prep.bucket_bound`
+— the pow4 bucket boundary of the fleet batch engine — so captured traces
+land in the *existing* geometry buckets instead of leaking ragged line
+counts into new compile keys (the compile-budget gate stays exact).  The
+pad lines belong to no region and are never referenced by any stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sim.prep import bucket_bound
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """One contiguous run of lines inside the capture address space."""
+
+    name: str
+    base: int
+    num_lines: int
+
+    def line(self, offset):
+        """Region-relative offset(s) -> absolute line id(s), bounds-checked.
+
+        Accepts scalars or integer arrays; raises ``ValueError`` on any
+        offset outside ``[0, num_lines)`` — a capture adapter that computes
+        an out-of-region offset is a mapping bug, not padding.
+        """
+        off = np.asarray(offset)
+        if off.size and (int(off.min()) < 0 or int(off.max()) >= self.num_lines):
+            raise ValueError(
+                f"region {self.name!r}: offset out of [0, {self.num_lines}) "
+                f"(got min {int(off.min())}, max {int(off.max())})")
+        return np.asarray(self.base + off, dtype=np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class LineLayout:
+    """Named regions packed base-to-top + the pow4-padded region size.
+
+    ``num_lines`` is always ``bucket_bound(sum of region sizes)``: the
+    declared geometry IS a bucket boundary, asserted again by the windower
+    (:class:`repro.capture.recorder.WindowRecorder`) when it emits the
+    trace.
+    """
+
+    regions: tuple[Region, ...]
+    num_lines: int
+
+    @classmethod
+    def build(cls, spec: list[tuple[str, int]]) -> "LineLayout":
+        """``[(region_name, lines), ...]`` -> layout with sequential bases."""
+        regions, base = [], 0
+        for name, lines in spec:
+            if lines < 1:
+                raise ValueError(f"region {name!r} needs >= 1 line, got {lines}")
+            if any(r.name == name for r in regions):
+                raise ValueError(f"duplicate region name {name!r}")
+            regions.append(Region(name, base, int(lines)))
+            base += int(lines)
+        return cls(tuple(regions), bucket_bound(base))
+
+    @property
+    def natural_lines(self) -> int:
+        """Total lines actually owned by regions (before pow4 padding)."""
+        return sum(r.num_lines for r in self.regions)
+
+    def region(self, name: str) -> Region:
+        for r in self.regions:
+            if r.name == name:
+                return r
+        raise KeyError(f"no region {name!r} "
+                       f"(know {[r.name for r in self.regions]})")

@@ -1,0 +1,57 @@
+"""Deterministic request-mix streams for the capture adapters.
+
+Every random decision a capture adapter makes (request admission, prompt
+lengths, zipfian token/page picks, routing drift) is drawn from the same
+Threefry-2x32 counter PRNG the synthetic families use
+(:mod:`repro.sim.synth`), keyed by :func:`repro.sim.synth.derive_key` on
+``(app, seed, stream-name)``.  A :class:`Stream` wraps one named key with
+a monotone counter, so a capture run is a pure function of
+``(model seed, request-mix seed)`` — the determinism the acceptance
+criteria pin end to end.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim import synth
+
+
+class Stream:
+    """One named counter-PRNG stream with a private monotone counter."""
+
+    def __init__(self, app: str, seed: int, name: str):
+        self.key = synth.derive_key(app, None, seed, name)
+        self._n = 0
+
+    def _ctr(self, k: int) -> np.ndarray:
+        ctr = np.arange(self._n, self._n + k, dtype=np.uint32)
+        self._n += k
+        return ctr
+
+    def u01(self, size: int | None = None):
+        """Uniform float(s) in [0, 1)."""
+        out = synth.counter_u01(np, self.key, self._ctr(size or 1))
+        return float(out[0]) if size is None else out
+
+    def mod(self, bound: int, size: int | None = None):
+        """Uniform int(s) in [0, bound)."""
+        out = synth.counter_mod(np, self.key, self._ctr(size or 1), bound)
+        return int(out[0]) if size is None else out.astype(np.int64)
+
+    def zipf(self, n: int, skew: float, size: int | None = None):
+        """Zipf-like skewed id(s) in [0, n): ``floor(n * u**skew)`` — rank 0
+        is the hot end; larger ``skew`` concentrates harder."""
+        u = synth.counter_u01(np, self.key, self._ctr(size or 1))
+        ids = np.minimum((n * u.astype(np.float64) ** skew).astype(np.int64),
+                         n - 1)
+        return int(ids[0]) if size is None else ids
+
+
+def perm(app: str, seed: int, name: str, n: int) -> np.ndarray:
+    """A deterministic permutation of ``range(n)`` (rank -> id), so two
+    tenants sharing one table get different hot sets from the same zipf
+    rank distribution."""
+    key = synth.derive_key(app, None, seed, name)
+    bits = synth.counter_bits(np, key, np.arange(n, dtype=np.uint32))
+    return np.argsort(bits, kind="stable").astype(np.int64)

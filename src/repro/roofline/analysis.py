@@ -167,6 +167,59 @@ def analyze_cell(arch: str, shape_name: str, multi_pod: bool = False,
     }
 
 
+# ---------------------------------------------------------------------------
+# Trace arithmetic intensity (simulator-side roofline input)
+# ---------------------------------------------------------------------------
+
+
+def trace_intensity(trace) -> dict:
+    """Bytes/line-touch profile of a ``WindowTrace`` (read-only numpy).
+
+    Counts the recorded access slots (64 B per line touch; each CPU slot
+    stands for ``cpu_reuse`` dynamic accesses, DESIGN.md §7) and reports
+    the same intensity terms the HLO roofline uses, so a *captured*
+    workload (:mod:`repro.capture`) prints next to the synthetic families
+    and next to the model cells it was recorded from.
+    """
+    pim_touch = int((np.asarray(trace.pim_reads) >= 0).sum()
+                    + (np.asarray(trace.pim_writes) >= 0).sum())
+    cpu_slots = int((np.asarray(trace.cpu_reads) >= 0).sum()
+                    + (np.asarray(trace.cpu_writes) >= 0).sum())
+    cpu_touch = cpu_slots * float(trace.cpu_reuse)
+    pim_bytes = 64.0 * pim_touch
+    cpu_bytes = 64.0 * cpu_touch
+    ids = np.concatenate([np.asarray(a).reshape(-1) for a in
+                          (trace.pim_reads, trace.pim_writes,
+                           trace.cpu_reads, trace.cpu_writes)])
+    lines_touched = int(np.unique(ids[ids >= 0]).size)
+    pim_instr = float(np.asarray(trace.pim_instr, dtype=np.float64).sum())
+    cpu_instr = float(np.asarray(trace.cpu_instr, dtype=np.float64).sum())
+    total = pim_bytes + cpu_bytes
+    return {
+        "name": trace.name,
+        "num_lines": int(trace.num_lines),
+        "lines_touched": lines_touched,
+        "pim_bytes": pim_bytes,
+        "cpu_bytes": cpu_bytes,
+        "bytes_per_line_touch": total / max(lines_touched, 1),
+        "pim_instr_per_byte": pim_instr / max(pim_bytes, 1.0),
+        "cpu_instr_per_byte": cpu_instr / max(cpu_bytes, 1.0),
+        "pim_share": pim_bytes / max(total, 1.0),
+    }
+
+
+def intensity_table(workloads=None, captured: bool = False,
+                    **trace_kw) -> list[dict]:
+    """``trace_intensity`` rows for a set of (app, graph) pairs (default:
+    the paper set; ``captured=True`` appends the live-model captures)."""
+    from repro.sim.trace import all_workloads, make_trace
+
+    if workloads is None:
+        workloads = all_workloads(captured=captured)
+    return [trace_intensity(make_trace(app, g, **trace_kw))
+            for app, g in workloads]
+
+
 def main():
     import os
     os.environ.setdefault("XLA_FLAGS",

@@ -67,10 +67,16 @@ HTAP_APPS = ("htap128", "htap192", "htap256")
 FRONTIER_APPS = ("bfs", "sssp")
 STREAM_APPS = ("htap_stream",)
 MT_APPS = ("mtmix",)
+# Captured from live model execution (repro.capture), not synthesized:
+# first-class workloads everywhere a synthetic app name is accepted
+# (Study, run_batch, serve admission), but build_plan rejects them —
+# there is no synthesis plan to build.
+CAPTURE_APPS = ("capture/kv_serve", "capture/moe_experts",
+                "capture/lazy_embed")
 
 # app -> needs a graph input?
 ALL_APPS = {**{a: True for a in GRAPH_APPS + FRONTIER_APPS + MT_APPS},
-            **{a: False for a in HTAP_APPS + STREAM_APPS}}
+            **{a: False for a in HTAP_APPS + STREAM_APPS + CAPTURE_APPS}}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,6 +129,11 @@ def build_plan(
     the same per-family defaults ``make_trace`` applies (scale 0.01 for the
     table families, streaming's higher ``cpu_reuse``).  The public plan
     entry point for benchmarks that drive :mod:`repro.sim.synth` directly."""
+    if app.startswith("capture/"):
+        raise ValueError(
+            f"{app!r} is a captured workload: it is recorded from live "
+            f"model execution (repro.capture), not synthesized — use "
+            f"make_trace")
     if app not in ALL_APPS:
         raise ValueError(f"unknown app {app!r} (know {sorted(ALL_APPS)})")
     if ALL_APPS[app] and graph_name not in GRAPH_INPUTS:
@@ -187,7 +198,20 @@ def make_trace(
     table families (HTAP/streaming) don't.  ``backend="jax"`` (default)
     runs the jit-compiled on-device generator; ``backend="ref"`` the
     sequential numpy reference — bit-identical by construction and by test.
+    ``capture/*`` apps are *recorded* from live model execution
+    (:mod:`repro.capture`) instead of synthesized; unknown ``capture/``
+    specs raise the same admission-time ValueError unknown apps do.
     """
+    if app.startswith("capture/"):
+        if graph_name is not None:
+            raise ValueError(f"{app!r} is a captured workload: graph_name "
+                             f"must be None, got {graph_name!r}")
+        from repro import capture
+
+        return capture.capture_trace(
+            app, threads=threads, seed=seed, num_kernels=num_kernels,
+            windows_per_kernel=windows_per_kernel, scale=scale,
+            cpu_reuse=cpu_reuse, backend=backend)
     plan, edges, name = build_plan(app, graph_name, threads, num_kernels,
                                    windows_per_kernel, seed, scale, cpu_reuse)
     if backend == "jax":
@@ -223,10 +247,14 @@ def make_htap_trace(app="htap128", threads=16, num_kernels=24,
                       cpu_reuse=cpu_reuse, backend=backend)
 
 
-def all_workloads(extended: bool = False) -> list[tuple[str, str | None]]:
+def all_workloads(extended: bool = False,
+                  captured: bool = False) -> list[tuple[str, str | None]]:
     """The paper's 12 evaluated (app, input) pairs (Fig. 7); with
     ``extended=True``, also the new families (frontier kernels on every
-    graph input, streaming-ingest HTAP, multi-tenant mixes)."""
+    graph input, streaming-ingest HTAP, multi-tenant mixes); with
+    ``captured=True``, also the live-model captured families
+    (:mod:`repro.capture`) — opt-in, so fig7-style fleets keep the
+    paper-set means unchanged by default."""
     out: list[tuple[str, str | None]] = [
         (a, g) for a in GRAPH_APPS for g in GRAPH_INPUTS
     ]
@@ -235,4 +263,6 @@ def all_workloads(extended: bool = False) -> list[tuple[str, str | None]]:
         out += [(a, g) for a in FRONTIER_APPS for g in GRAPH_INPUTS]
         out += [(a, None) for a in STREAM_APPS]
         out += [(a, g) for a in MT_APPS for g in GRAPH_INPUTS]
+    if captured:
+        out += [(a, None) for a in CAPTURE_APPS]
     return out

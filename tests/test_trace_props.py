@@ -243,3 +243,103 @@ def test_max_sig_addrs_is_enforced_at_full_scale():
     reads = np.asarray(tr.pim_reads)
     uniq = P._uniq_count(reads)
     assert uniq.max() <= MAX_SIG_ADDRS
+
+
+# ---------------------------------------------------------------------------
+# Captured workloads (repro.capture): the same invariants must hold on
+# traces *recorded* from live model execution, not drawn from a plan.
+# Kept out of FAMILY_CASES: capture window counts are data-dependent, so
+# they'd thrash the scan-compile-sharing the padding property relies on.
+# ---------------------------------------------------------------------------
+
+from repro.sim.trace import CAPTURE_APPS  # noqa: E402
+
+
+def _small_capture(case_idx: int, seed: int):
+    app = CAPTURE_APPS[case_idx % len(CAPTURE_APPS)]
+    return make_trace(app, seed=seed, num_kernels=3, windows_per_kernel=2,
+                      scale=0.05)
+
+
+def _natural_lines(app: str) -> int:
+    """The layout's region-owned line count (everything beyond it is pow4
+    padding no stream may touch)."""
+    from repro.capture import (KVServeConfig, LazyEmbedConfig,
+                               MoEExpertsConfig)
+    cfg = {"capture/kv_serve": KVServeConfig,
+           "capture/moe_experts": MoEExpertsConfig,
+           "capture/lazy_embed": LazyEmbedConfig}[app].scaled(0.05)
+    return cfg.layout().natural_lines
+
+
+@settings(max_examples=9, deadline=None)
+@given(case=st.integers(0, len(CAPTURE_APPS) - 1),
+       seed=st.integers(0, 2 ** 16))
+def test_capture_trace_invariants(case, seed):
+    """Sentinel correctness, §5.4 insert cap, pre-write/pad disjointness,
+    and fixed-seed determinism — over the captured families."""
+    tr = _small_capture(case, seed)
+    n = tr.num_lines
+    natural = _natural_lines(tr.name)
+    assert n == P.bucket_bound(n), "captured trace leaked a ragged geometry"
+
+    for name in ("pim_reads", "pim_writes", "cpu_reads", "cpu_writes"):
+        ids = np.asarray(getattr(tr, name))
+        assert ids.dtype == np.int32, name
+        assert np.all((ids == -1) | ((ids >= 0) & (ids < n))), \
+            f"{tr.name}.{name}: slot outside [-1] ∪ [0, {n})"
+        # pad disjointness: the pow4 pad lines belong to no layout region
+        assert np.all(ids < natural), \
+            f"{tr.name}.{name}: access in the padded region"
+
+    for name in ("pim_reads", "pim_writes"):
+        ids = np.asarray(getattr(tr, name))
+        for row in ids:
+            assert len(np.unique(row[row >= 0])) <= MAX_SIG_ADDRS, name
+
+    pre = np.asarray(tr.pre_writes)
+    assert pre.shape == (tr.num_kernels, n) and pre.dtype == bool
+    assert pre.any(axis=1).all(), "a kernel with an empty inter-kernel phase"
+    assert not pre[:, natural:].any(), "pre-write set in the padded region"
+
+    kid = np.asarray(tr.kernel_id)
+    assert kid.min() == 0 and kid.max() == tr.num_kernels - 1
+    assert np.asarray(tr.kernel_start).sum() == tr.num_kernels
+    assert np.asarray(tr.kernel_end).sum() == tr.num_kernels
+
+    again = _small_capture(case, seed)
+    for name in ("pim_reads", "pim_writes", "cpu_reads", "cpu_writes",
+                 "pre_writes", "pim_instr", "cpu_instr"):
+        np.testing.assert_array_equal(np.asarray(getattr(tr, name)),
+                                      np.asarray(getattr(again, name)))
+
+
+def test_capture_prepare_round_trip():
+    """prepare() stages captured traces unchanged (packed pad bits zero,
+    validity ↔ sentinels, unique counts recount) — one fixed seed per
+    adapter; the hypothesis sweep above covers the seed space."""
+    for case in range(len(CAPTURE_APPS)):
+        tr = _small_capture(case, seed=5)
+        tt = prepare(tr)
+        n = tr.num_lines
+        words = np.asarray(tt.pre_writes_words)
+        np.testing.assert_array_equal(
+            np.asarray(P.unpack_bitmap(tt.pre_writes_words, n)),
+            np.asarray(tr.pre_writes))
+        pad = tt.num_line_words * 32 - n
+        if pad:
+            assert np.all(words[:, -1] >> np.uint32(32 - pad) == 0)
+        for ids_name, valid_name in (("pim_reads", "pim_r_valid"),
+                                     ("pim_writes", "pim_w_valid"),
+                                     ("cpu_reads", "cpu_r_valid"),
+                                     ("cpu_writes", "cpu_w_valid")):
+            ids = np.asarray(getattr(tr, ids_name))
+            np.testing.assert_array_equal(np.asarray(getattr(tt, ids_name)),
+                                          ids)
+            np.testing.assert_array_equal(
+                np.asarray(getattr(tt, valid_name)), ids >= 0)
+        pr, pw = np.asarray(tr.pim_reads), np.asarray(tr.pim_writes)
+        np.testing.assert_array_equal(np.asarray(tt.pim_uniq_r),
+                                      P._uniq_count_loop(pr))
+        np.testing.assert_array_equal(np.asarray(tt.pim_uniq),
+                                      P._uniq_union_count_loop(pr, pw))
